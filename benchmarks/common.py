@@ -1,0 +1,35 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from repro.serving.cluster import FragmentedCluster
+from repro.serving.simulator import ClusterSim, POLICIES, table2_profile
+from repro.serving.workload import synth_requests
+
+
+def run_policy(name: str, *, cv: float, rate: float = 20.0,
+               duration: float = 600.0, slo: float = 4.0, seed: int = 0,
+               peak_instances: int = 4, static_stages: int | None = None,
+               deadline_s: float | None = None):
+    rng = np.random.default_rng(seed)
+    reqs = synth_requests(rng, rate=rate, cv=cv, duration=duration,
+                          deadline_s=deadline_s or slo)
+    pol = copy.deepcopy(POLICIES[name])
+    if static_stages is not None:
+        pol.static_stages = static_stages
+        pol.adaptive = False
+    sim = ClusterSim(pol, FragmentedCluster.synth(np.random.default_rng(1)),
+                     np.random.default_rng(2), slo=slo,
+                     peak_instances=peak_instances)
+    out = sim.run(reqs)
+    out["stats"] = sim.stats
+    out["n_requests"] = len(reqs)
+    return out
+
+
+def emit(rows: list[tuple]) -> None:
+    for r in rows:
+        print(",".join(str(x) for x in r))

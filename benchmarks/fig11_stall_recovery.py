@@ -1,0 +1,60 @@
+"""Fig. 11: pipeline-stall recovery time across systems and CV.
+
+Paper definitions (§9.3): stall = latency > 1.5x baseline P25; recovery =
+back under 1.2x.  FlexPipe at CV=4 recovers in ~9 ms via inflight
+refactoring while static systems wait out the queue (16-50 ms).  Our
+simulator's time quantum is coarser, so we report the RATIO to the
+static baseline alongside absolute values.
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_policy
+
+
+def run():
+    rows = [("fig11.header", "policy,cv,median_recovery_s,episodes")]
+    res = {}
+    for cv in (1.0, 2.0, 4.0):
+        for pol in ("flexpipe", "alpaserve", "muxserve", "serverlessllm",
+                    "tetris"):
+            out = run_policy(pol, cv=cv, duration=600.0, slo=4.0)
+            eps = out["stats"].stall_episodes()
+            res[(pol, cv)] = out["median_recovery_s"]
+            rows.append((f"fig11.{pol}.cv{cv}",
+                         f"{out['median_recovery_s']:.2f}", len(eps)))
+    fp, alpa = res[("flexpipe", 4.0)], res[("alpaserve", 4.0)]
+    if alpa > 0:
+        rows.append(("fig11.flexpipe_vs_alpaserve_cv4",
+                     f"{fp / max(alpa, 1e-9):.2f}",
+                     "paper: 9ms vs 16ms (0.56x)"))
+    # the paper's 9 ms is the REFACTORING transition itself — measured for
+    # real on the JAX engine (live stage regroup with in-flight requests)
+    rows.append(("fig11.real_engine_refactor_ms", f"{_engine_refactor_ms():.1f}",
+                 "paper=9ms at CV=4"))
+    return rows
+
+
+def _engine_refactor_ms() -> float:
+    import jax
+    from repro.configs.base import get_arch
+    from repro.models.transformer import init_model
+    from repro.serving.engine import EngineConfig, FlexPipeEngine
+    from repro.serving.workload import Request
+
+    cfg = get_arch("qwen1.5-0.5b").smoke_config
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    eng = FlexPipeEngine(cfg, params, [0, 2],
+                         EngineConfig(max_batch=4, max_seq=64))
+    for i in range(3):
+        eng.submit(Request(rid=i, arrival=0.0, prompt_len=12,
+                           max_new_tokens=8))
+    eng._admit(0.0)
+    for t in range(3):
+        eng.decode_step(t * 0.1)
+    ev = eng.refactor([0, 1, 2, 3])       # cache regroup + stage rebuild
+    return ev["t"] * 1e3
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

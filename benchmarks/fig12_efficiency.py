@@ -1,0 +1,34 @@
+"""Fig. 12: resource efficiency — goodput vs GPU commitment across CV.
+
+Paper: at CV=4 FlexPipe sustains full goodput at 43% utilization while
+Tetris gets 1543 req/s at 85% — 8.5x better goodput-per-GPU; FlexPipe's
+always-on reserve is 30% of peak vs 75% for static systems.
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_policy
+
+
+def run():
+    rows = [("fig12.header",
+             "policy,cv,goodput,busy_frac,instances,goodput_per_busy")]
+    res = {}
+    for cv in (1.0, 2.0, 4.0):
+        for pol in ("flexpipe", "alpaserve", "serverlessllm", "tetris"):
+            out = run_policy(pol, cv=cv, duration=600.0, slo=4.0,
+                             peak_instances=6)
+            eff = out["goodput"] / max(out["busy_frac"]
+                                       * out["instances_final"], 1e-9)
+            res[(pol, cv)] = eff
+            rows.append((f"fig12.{pol}.cv{cv}", f"{out['goodput']:.2f}",
+                         f"{out['busy_frac']:.3f}", out["instances_final"],
+                         f"{eff:.1f}"))
+    gain = res[("flexpipe", 4.0)] / max(res[("tetris", 4.0)], 1e-9)
+    rows.append(("fig12.flexpipe_vs_tetris_efficiency_cv4", f"{gain:.2f}",
+                 "paper=8.5x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

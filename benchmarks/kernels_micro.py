@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks (interpret-mode wall time is NOT a TPU proxy —
+reported as us_per_call for regression tracking; the roofline table in
+EXPERIMENTS.md carries the TPU-relevant numbers)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n=3):
+    fn(*args)[0] if isinstance(fn(*args), tuple) else fn(*args)  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = [("kernels.header", "name,us_per_call,oracle_us")]
+    q = jax.random.normal(key, (1, 256, 4, 64))
+    k = jax.random.normal(key, (1, 256, 2, 64))
+    v = jax.random.normal(key, (1, 256, 2, 64))
+    t_k = _time(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v)
+    t_r = _time(lambda a, b, c: ref.attention_ref(a, b, c), q, k, v)
+    rows.append(("kernels.flash_attention_256", f"{t_k:.0f}", f"{t_r:.0f}"))
+
+    qd = jax.random.normal(key, (4, 8, 64))
+    kc = jax.random.normal(key, (4, 4, 1024, 64))
+    vc = jax.random.normal(key, (4, 4, 1024, 64))
+    cl = jnp.asarray(1000)
+    t_k = _time(lambda a, b, c: ops.decode_attention(a, b, c, cl), qd, kc, vc)
+    t_r = _time(lambda a, b, c: ref.decode_attention_ref(a, b, c, cl), qd, kc, vc)
+    rows.append(("kernels.decode_attention_1k", f"{t_k:.0f}", f"{t_r:.0f}"))
+
+    r_ = jax.random.normal(key, (1, 128, 2, 64)) * 0.5
+    w_ = jax.nn.sigmoid(jax.random.normal(key, (1, 128, 2, 64))) * 0.5 + 0.45
+    u_ = jax.random.normal(key, (2, 64)) * 0.1
+    t_k = _time(lambda a, b: ops.wkv6(a, a, a, b, u_)[0], r_, w_)
+    t_r = _time(lambda a, b: ref.wkv6_ref(a, a, a, b, u_)[0], r_, w_)
+    rows.append(("kernels.wkv6_128", f"{t_k:.0f}", f"{t_r:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8]
+
+Each module's run() returns CSV rows (name, value, [derived/paper-ref...]).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table2_granularity",     # Table 2
+    "fig3_static_cv",         # Fig 3
+    "fig4_granularity_cv",    # Fig 4
+    "fig8_latency_breakdown", # Fig 8
+    "fig9_burst",             # Fig 9
+    "fig11_stall_recovery",   # Fig 11
+    "fig12_efficiency",       # Fig 12
+    "fig13_prefill",          # Fig 13
+    "kernels_micro",          # kernel regression numbers
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failed = []
+    for mod in MODULES:
+        if args.only and args.only not in mod:
+            continue
+        t0 = time.time()
+        print(f"# === {mod} ===", flush=True)
+        try:
+            m = __import__(f"benchmarks.{mod}", fromlist=["run"])
+            for row in m.run():
+                print(",".join(str(x) for x in row), flush=True)
+            print(f"# {mod} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed.append(mod)
+            print(f"# {mod} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILURES: {failed}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

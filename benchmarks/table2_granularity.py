@@ -1,0 +1,62 @@
+"""Table 2: pipeline-granularity trade-off (load / compute / comm / batch).
+
+Derived from the analytic TPU cost model for an OPT-66B-class config
+(64L, d=9216, 72H, ff=36864) on v5e — the TPU-native counterpart of the
+paper's A100 measurements.  Reported alongside the paper's anchors so the
+TRENDS (load ∝ 1/S, comm ∝ S, batch ∝ S) are directly comparable.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.launch.roofline import BYTES, HBM_BW, PEAK_FLOPS, layer_fwd, layer_param_bytes
+from repro.serving.simulator import TABLE2
+
+OPT66 = ModelConfig(name="opt-66b", family="dense", n_layers=64,
+                    d_model=9216, n_heads=72, n_kv_heads=72, d_ff=36864,
+                    vocab_size=50272, tie_embeddings=False)
+
+STORAGE_BW = 2e9          # remote checkpoint streaming, bytes/s
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9
+
+
+def rows():
+    out = [("table2.header", "S,load_s,compute_ms,comm_ms,max_batch,"
+            "paper_load,paper_comm")]
+    lp = layer_param_bytes(OPT66, 0, T=1)
+    total_param_bytes = lp * OPT66.n_layers
+    for S in (4, 8, 16, 32):
+        per_stage = total_param_bytes / S
+        load_s = per_stage / STORAGE_BW
+        tok = 4096                      # one seq per iteration (paper setup)
+        lf = layer_fwd(OPT66, 0, tok, 4096, T=1, decode=False)
+        stage_flops = lf.flops * (OPT66.n_layers / S)
+        compute_ms = stage_flops / PEAK_FLOPS * 1e3
+        act = tok * OPT66.d_model * BYTES
+        comm_ms = act * S / ICI_BW * 1e3            # S boundary hops/iter
+        # max batch: KV cache for 4096-token seqs in the HBM left per stage
+        kv_per_req = (OPT66.n_layers / S) * 2 * OPT66.n_kv_heads \
+            * OPT66.resolved_head_dim * 4096 * BYTES
+        free = HBM_PER_CHIP - per_stage
+        max_batch = int(max(free, 0) // kv_per_req)
+        p = TABLE2.get(S, {})
+        out.append((f"table2.S{S}", f"{load_s:.2f}", f"{compute_ms:.2f}",
+                    f"{comm_ms:.2f}", max_batch,
+                    p.get("load", ""), p.get("comm", "")))
+    # headline ratios vs paper's 8.7x load and ~10x comm across 4->32
+    l4 = float(out[1][1]); l32 = float(out[4][1])
+    c4 = float(out[1][3]); c32 = float(out[4][3])
+    out.append(("table2.load_ratio_4_over_32", f"{l4 / l32:.2f}",
+                "paper=8.68"))
+    out.append(("table2.comm_ratio_32_over_4", f"{c32 / c4:.2f}",
+                "paper=10.33"))
+    return out
+
+
+def run():
+    return rows()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

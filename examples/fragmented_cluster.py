@@ -1,0 +1,54 @@
+"""Fragmentation study: reproduce the paper's §3.1 cluster statistics and
+show topology-aware allocation (HRG) + affinity warm starts in action.
+
+    PYTHONPATH=src python examples/fragmented_cluster.py
+"""
+import numpy as np
+
+from repro.core.affinity import AffinityScheduler, HostParamCache
+from repro.core.hrg import HierarchicalResourceGraph
+from repro.serving.cluster import FragmentedCluster
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    # paper-scale production cluster statistics (C1-like)
+    big = FragmentedCluster.synth(rng, n_servers=430, n_gpus=468)
+    print("=== fragmentation statistics (paper §3.1) ===")
+    print(f"P(GPU >85% free)        = {big.p_free_gpu():.3f}   (paper: 0.087)")
+    print(f"P(4 co-located free)    = {big.p_colocated(4):.4f} (paper: 0.0002)")
+    print(f"subscription rate       = {big.subscription_rate():.2f}    (paper: 2.16)")
+    tp_fail = 1 - big.p_colocated(4)
+    print(f"TP requests degraded    = {tp_fail:.2%}  (paper: 78% -> pipeline)")
+
+    # HRG: route two concurrent scale-ups away from each other
+    print("\n=== topology-aware coordination (HRG) ===")
+    hrg = HierarchicalResourceGraph()
+    for r in range(2):
+        hrg.add_rack(f"rack{r}")
+        for s in range(3):
+            hrg.add_server(f"rack{r}", f"srv{r}{s}")
+    servers = list(hrg.servers)
+    first = hrg.least_contended(servers, now=0.0)
+    hrg.reserve(first, 20e9)
+    hrg.mark_event(first, 0.0, 120e9)
+    second = hrg.least_contended(servers, now=1.0)
+    print(f"scale-up #1 -> {first}; scale-up #2 -> {second} "
+          f"(avoids the contended path: {first != second})")
+
+    # affinity warm starts (Eq. 13)
+    print("\n=== memory-aware warm starts (Eq. 13) ===")
+    cache = HostParamCache()
+    sched = AffinityScheduler()
+    sched.record_placement("opt-66b", "srv00", now=0.0)
+    cache.put("srv00", "opt-66b", 0, 15e9, now=0.0)
+    pick = sched.select("opt-66b", {s: 2 for s in servers}, now=60.0)
+    cold = cache.load_time("srv11", "opt-66b", 0, 15e9)
+    warm = cache.load_time("srv00", "opt-66b", 0, 15e9)
+    print(f"affinity picks {pick}; load time warm={warm:.2f}s vs cold={cold:.2f}s "
+          f"({cold/warm:.0f}x faster)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

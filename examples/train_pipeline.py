@@ -1,0 +1,89 @@
+"""End-to-end training driver: train a ~small model for a few hundred steps
+through the SPMD pipeline (stage+tensor parallel, vocab-parallel CE, AdamW,
+checkpoint/restart with an injected fault).
+
+    PYTHONPATH=src python examples/train_pipeline.py [--steps 200]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.mesh import make_local_mesh
+from repro.models.transformer import init_model
+from repro.parallel.pipeline import build_train_step, stack_params
+from repro.configs.base import PipelinePlan
+from repro.training import checkpoint as ckpt
+from repro.training.fault_tolerance import TrainSupervisor
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).smoke_config
+    plan = PipelinePlan(stages=2, tensor=2, replica=1, microbatches=2)
+    mesh = make_local_mesh(data=2, model=4)
+    shape = ShapeConfig("train", seq_len=32, global_batch=8, kind="train")
+    data = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    global_batch=8, seed=0))
+
+    params = stack_params(cfg, plan, init_model(jax.random.PRNGKey(0), cfg,
+                                                jnp.float32))
+    opt = init_opt_state(params)
+    step_fn, _ = build_train_step(cfg, plan, mesh, shape,
+                                  AdamWConfig(lr=1e-3, warmup_steps=20,
+                                              total_steps=args.steps),
+                                  param_dtype=jnp.float32)
+
+    ckpt_dir = os.path.join(tempfile.gettempdir(), "flexpipe_train_ckpt")
+    sup = TrainSupervisor(ckpt_dir=ckpt_dir, ckpt_every=50)
+
+    losses = []
+
+    def one_step(state, step):
+        p, o = state
+        b = data.batch(step)
+        p, o, m = step_fn(p, o, {"tokens": jnp.asarray(b["tokens"]),
+                                 "labels": jnp.asarray(b["labels"])})
+        losses.append(float(m["loss"]))
+        if step % 25 == 0:
+            print(f"step {step:4d} loss {m['loss']:.4f} "
+                  f"gnorm {float(m['grad_norm']):.2f}")
+        return (p, o)
+
+    def save(state, step):
+        ckpt.save(ckpt_dir, state, step=step)
+
+    def restore():
+        (p, o), step, _ = ckpt.restore(ckpt_dir, (params, opt))
+        print(f"  >> restored from checkpoint at step {step}")
+        return (p, o), step
+
+    save((params, opt), 0)
+    t0 = time.time()
+    state, step = sup.run(n_steps=args.steps, step_fn=one_step,
+                          state=(params, opt), save_fn=save,
+                          restore_fn=restore,
+                          inject_fault_at=args.steps // 2)
+    dt = time.time() - t0
+    print(f"\ntrained {step} steps in {dt:.1f}s "
+          f"({sup.restarts} restart after injected fault)")
+    print(f"loss: first10={sum(losses[:10])/10:.3f} "
+          f"last10={sum(losses[-10:])/10:.3f}")
+    assert sum(losses[-10:]) < sum(losses[:10]), "loss must decrease"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

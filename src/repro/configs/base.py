@@ -1,0 +1,269 @@
+"""Config system: model architectures, input shapes, and parallelism plans.
+
+Every assigned architecture is a ``ModelConfig``; every assigned input shape a
+``ShapeConfig``.  A ``PipelinePlan`` is FlexPipe's granularity knob: the
+factorization of the mesh "model" axis into (stage, tensor, replica).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# Layer kinds
+# ---------------------------------------------------------------------------
+
+MIXER_ATTN = "attn"          # self attention (GQA / MHA)
+MIXER_MLA = "mla"            # DeepSeek-V2 multi-head latent attention
+MIXER_MAMBA = "mamba"        # Mamba-1 selective SSM
+MIXER_RWKV = "rwkv"          # RWKV-6 (Finch) time mix
+MIXER_CROSS = "cross"        # cross-attention (VLM image layers / whisper dec)
+
+MLP_DENSE = "dense"
+MLP_MOE = "moe"
+
+
+@dataclass(frozen=True)
+class LayerKind:
+    """Static description of one layer position inside the repeating pattern."""
+    mixer: str = MIXER_ATTN
+    mlp: str = MLP_DENSE
+    # whisper decoder: self-attn THEN cross-attn THEN mlp in one layer
+    extra_cross: bool = False
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert hidden dim
+    n_shared: int = 0             # shared (always-on) experts
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    # mamba
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0              # 0 => ceil(d_model/16)
+    # rwkv6
+    head_size: int = 64
+    decay_lora: int = 64
+    mix_lora: int = 32
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | audio | ssm | vlm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 => d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = True
+    # attention locality: every `global_every`-th layer is global, the rest use
+    # a sliding window of `sliding_window` tokens (gemma3's 5:1 local:global).
+    sliding_window: int = 0
+    global_every: int = 0
+    # repeating pattern of layer kinds; len(pattern) must divide n_layers.
+    pattern: tuple[LayerKind, ...] = (LayerKind(),)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # encoder-decoder (whisper): encoder layers are extra, decoder = n_layers.
+    encoder_layers: int = 0
+    # VLM / cross-attn memory (precomputed frontend stub): tokens fed to MIXER_CROSS
+    n_memory_tokens: int = 0
+    # MLP activation: swiglu (llama/qwen/deepseek), geglu (gemma), gelu (whisper)
+    mlp_act: str = "swiglu"
+    # source provenance tag from the assignment
+    source: str = ""
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern_size(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_patterns(self) -> int:
+        assert self.n_layers % self.pattern_size == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"pattern_size={self.pattern_size}")
+        return self.n_layers // self.pattern_size
+
+    def layer_kind(self, layer_idx: int) -> LayerKind:
+        return self.pattern[layer_idx % self.pattern_size]
+
+    def is_global_layer(self, layer_idx: int) -> bool:
+        """Gemma3-style 5:1 local:global — every Nth layer is global.
+
+        Evaluated on the position within the repeating pattern so the property
+        is static under stage-stacking (DESIGN.md §5; for gemma3-1b whose 26
+        layers don't tile by 6 this shifts two global layers by one slot).
+        """
+        if not self.global_every:
+            return True
+        j = layer_idx % self.pattern_size if self.pattern_size > 1 else layer_idx
+        return (j % self.global_every) == (self.global_every - 1)
+
+    @property
+    def uses_full_attention_everywhere(self) -> bool:
+        """True if every mixer is unwindowed full attention (long_500k skip)."""
+        has_state = any(k.mixer in (MIXER_MAMBA, MIXER_RWKV) for k in self.pattern)
+        windowed = self.sliding_window > 0
+        return not has_state and not windowed
+
+    def param_count(self) -> int:
+        """Exact parameter count (embedding + blocks + head)."""
+        from repro.models.transformer import count_params  # lazy, avoids cycle
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.transformer import count_params
+        return count_params(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parallelism plan — FlexPipe's granularity knob
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PipelinePlan:
+    """Factorization of the mesh axes for one pipeline configuration.
+
+    The production mesh model axis (16) factorizes into
+    ``stages * tensor * replica``; FlexPipe refactoring moves between plans.
+    """
+    stages: int = 1               # pipeline stages S (the paper's granularity)
+    tensor: int = 1               # tensor parallelism T inside each stage
+    replica: int = 1              # extra model-axis replicas R (serving DP)
+    microbatches: int = 1         # GPipe microbatch count M
+    # decode-time sequence parallelism: shard the KV cache over the data axis
+    # (flash-decode across devices) — used for long_500k.
+    seq_parallel_kv: bool = False
+    remat: bool = True            # activation checkpointing for training
+    # ZeRO-3/FSDP: store params (and optimizer moments) additionally sharded
+    # over the data axis; all-gather per layer inside the stage scan (the
+    # gather transpose gives reduce-scattered grads for free).  Required to
+    # fit >50B-param training on 16GB v5e HBM.
+    fsdp: bool = False
+    # cast FSDP all-gathers to fp8 (halves wire traffic; beyond-paper)
+    fsdp_fp8_gather: bool = False
+    # KV cache dtype: "bf16" | "fp8" (halves decode HBM traffic + footprint)
+    kv_dtype: str = "bf16"
+
+    @property
+    def model_axis(self) -> int:
+        return self.stages * self.tensor * self.replica
+
+    def validate(self, cfg: ModelConfig, model_axis: int = 16) -> None:
+        if self.model_axis != model_axis:
+            raise ValueError(
+                f"plan S*T*R={self.model_axis} != model axis {model_axis}")
+        if cfg.n_patterns % self.stages != 0:
+            raise ValueError(
+                f"{cfg.name}: {cfg.n_patterns} patterns not divisible by "
+                f"S={self.stages} (pattern boundary constraint, DESIGN.md §5)")
+        # non-divisible head/ff dims degrade to replication in sharding.py
+        if cfg.vocab_size % (self.stages * self.tensor):
+            raise ValueError(
+                f"{cfg.name}: vocab {cfg.vocab_size} not divisible by "
+                f"S*T={self.stages * self.tensor} (vocab-parallel embed/head)")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, "ArchSpec"] = {}
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    config: ModelConfig
+    smoke_config: ModelConfig
+    default_plans: dict[str, PipelinePlan]          # shape name -> plan
+    skip_shapes: tuple[str, ...] = ()               # e.g. long_500k for full-attn
+
+    def plan_for(self, shape: str) -> PipelinePlan:
+        return self.default_plans[shape]
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.config.name] = spec
+    return spec
+
+
+def get_arch(name: str) -> ArchSpec:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    # importing each module registers its spec
+    from repro.configs import (  # noqa: F401
+        qwen1_5_0_5b, gemma3_12b, qwen1_5_110b, gemma3_1b, deepseek_moe_16b,
+        deepseek_v2_236b, whisper_tiny, rwkv6_1_6b, llama3_2_vision_11b,
+        jamba_v0_1_52b)
+
+
+def shrink(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Build a reduced same-family config for smoke tests."""
+    return dataclasses.replace(cfg, **overrides)

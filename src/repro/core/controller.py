@@ -1,0 +1,101 @@
+"""FlexPipeController: composes the paper's three components (§4).
+
+  1. Fine-grained partitioning (core/partitioner.py) builds the candidate
+     partitions once per model.
+  2. Inflight refactoring (core/refactoring.py) picks the live granularity
+     from real-time CV.
+  3. Adaptive scaling (core/scaling.py + hrg + affinity) reacts to queue
+     pressure with topology-aware, warm-start instance placement.
+
+Used by both the real JAX engine (serving/engine.py) and the cluster
+simulator (serving/simulator.py) — same control code, different data plane.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.affinity import AffinityScheduler, HostParamCache
+from repro.core.cv_monitor import CVMonitor
+from repro.core.granularity import GranularityProfile
+from repro.core.graph import build_graph
+from repro.core.hrg import HierarchicalResourceGraph
+from repro.core.partitioner import Partition, candidate_partitions
+from repro.core.refactoring import RefactoringController, plan_migration
+from repro.core.scaling import ScalingDecision, decide_scale_up
+
+
+@dataclass
+class ControllerConfig:
+    stage_counts: tuple[int, ...] = (2, 4, 8, 16)
+    alpha: float = 0.5              # Eq. 4 throughput/latency weight
+    sigma: float = 1.0              # Eq. 4 CV-affinity sensitivity
+    mem_cap: float = 16 * 1024**3
+    slo_deadline: float = 2.0
+    g_max: int = 32
+
+
+class FlexPipeController:
+    def __init__(self, cfg: ModelConfig,
+                 profiles: list[GranularityProfile],
+                 ctl: ControllerConfig = ControllerConfig()):
+        self.cfg = cfg
+        self.ctl = ctl
+        self.nodes = build_graph(cfg)
+        self.partitions: dict[int, Partition] = candidate_partitions(
+            self.nodes, [s for s in ctl.stage_counts
+                         if cfg.n_patterns % s == 0 or s <= cfg.n_patterns],
+            mem_cap=ctl.mem_cap)
+        self.refactor = RefactoringController(
+            profiles, alpha=ctl.alpha, sigma=ctl.sigma)
+        self.hrg = HierarchicalResourceGraph()
+        self.affinity = AffinityScheduler()
+        self.host_cache = HostParamCache()
+
+    # -- data-plane hooks -----------------------------------------------
+    def on_request(self, t: float) -> None:
+        self.refactor.record_arrival(t)
+
+    def control_step(self, now: float, queue_len: float):
+        """One Alg. 1 iteration; returns (decision, migration|None)."""
+        d = self.refactor.step(now, queue_len)
+        mig = None
+        if d.changed and len(self.partitions) >= 2:
+            old_s = self.refactor.history[-2][1] if len(
+                self.refactor.history) >= 2 else d.target.stages
+            new_s = d.target.stages
+            if old_s in self.partitions and new_s in self.partitions:
+                ob = self.partitions[old_s].layer_boundaries(self.nodes)
+                nb = self.partitions[new_s].layer_boundaries(self.nodes)
+                per_layer_p = sum(n.s_p for n in self.nodes) / self.cfg.n_layers
+                mig = plan_migration(
+                    ob, nb, self.cfg.n_layers,
+                    cache_bytes_per_layer=2e6,
+                    param_bytes_per_layer=per_layer_p)
+        return d, mig
+
+    def scale_decision(self, now: float, queue_len: float,
+                       required_rate: float,
+                       stage_throughput: float = 100.0) -> ScalingDecision:
+        cv = self.refactor.monitor.estimate(now).cv
+        return decide_scale_up(
+            cv=cv, queue_len=queue_len, deadline=self.ctl.slo_deadline,
+            init_time_per_stage=0.3, stage_throughput=stage_throughput,
+            required_rate=required_rate, g_max=self.ctl.g_max)
+
+    def place_instance(self, model: str, servers: dict[str, int],
+                       now: float) -> str:
+        """Affinity (Eq. 13) then HRG tiebreak on contention."""
+        s = self.affinity.select(model, servers, now)
+        if self.hrg.servers:
+            cands = [x for x in servers
+                     if x in self.hrg.servers] or [s]
+            s2 = self.hrg.least_contended(cands, now)
+            # prefer affinity unless its path is badly contended
+            if (s in self.hrg.servers and
+                    self.hrg.path_pressure(s, now)
+                    > 2 * self.hrg.path_pressure(s2, now)):
+                s = s2
+        self.affinity.record_placement(model, s, now)
+        return s

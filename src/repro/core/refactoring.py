@@ -1,0 +1,164 @@
+"""Inflight pipeline refactoring (paper §6, Algorithm 1 + Eq. 10).
+
+The controller loop: monitor CV/queues → score granularities (Eq. 4) →
+when the argmax changes, compute replica counts (Eq. 5), migrate KV caches
+under the token-validity-mask consistency protocol (Eq. 10), flip routing.
+
+Consistency protocol (Eq. 10):  C(t) = ∪_i KV_i(t) ⊗ M_valid.
+Implementation: every request's cache carries `valid_len` (tokens whose
+KV entries are final).  During migration the old pipeline KEEPS DECODING;
+tokens produced after the snapshot are re-synced with a delta pass before
+cutover, so the served stream never pauses ("shadow-then-cutover").
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cv_monitor import CVMonitor
+from repro.core.granularity import GranularityProfile, select
+from repro.models.kvcache import group_by_stage, migration_plan, regroup, cache_bytes
+
+
+# ---------------------------------------------------------------------------
+# Eq. 10 — consistency state for one in-flight request batch
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CacheSnapshot:
+    """Token-level validity-masked snapshot of per-layer caches."""
+    per_layer: list                       # per-layer cache pytrees
+    valid_len: int                        # tokens valid at snapshot time
+
+
+def snapshot(per_layer_caches: list, valid_len: int) -> CacheSnapshot:
+    return CacheSnapshot(
+        per_layer=jax.tree.map(jnp.copy, per_layer_caches),
+        valid_len=valid_len)
+
+
+def merge_with_mask(snap: CacheSnapshot, live: list, live_len: int,
+                    seq_axis_hint: int = 2) -> list:
+    """Eq. 10: C(t) = KV_snapshot ⊗ M_valid  ∪  KV_live ⊗ (¬M_valid).
+
+    Tokens [0, snap.valid_len) come from the snapshot; tokens
+    [snap.valid_len, live_len) (decoded while the migration was in flight)
+    come from the live cache.  For attention caches the merge is positional;
+    O(1) state caches (ssm/rwkv/conv) take the LIVE value (their state at
+    live_len subsumes earlier state).
+    """
+    def one(s_leaf, l_leaf):
+        if s_leaf.ndim >= 3 and s_leaf.shape[seq_axis_hint] >= live_len > 0:
+            pos = jnp.arange(s_leaf.shape[seq_axis_hint])
+            mask = (pos < snap.valid_len)
+            shape = [1] * s_leaf.ndim
+            shape[seq_axis_hint] = -1
+            m = mask.reshape(shape)
+            return jnp.where(m, s_leaf, l_leaf)
+        return l_leaf                      # O(1) state: live value wins
+    return jax.tree.map(one, snap.per_layer, live)
+
+
+# ---------------------------------------------------------------------------
+# Migration cost model (used by engine timing + simulator)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MigrationCost:
+    moved_layers: list                    # (layer, old_stage, new_stage)
+    cache_bytes_moved: float
+    param_bytes_moved: float
+    transfer_s: float
+    delta_sync_s: float
+
+
+def plan_migration(old_bounds: list[int], new_bounds: list[int],
+                   n_layers: int, *, cache_bytes_per_layer: float,
+                   param_bytes_per_layer: float, link_bw: float = 50e9,
+                   decode_rate: float = 50.0,
+                   inflight_tokens: int = 1) -> MigrationCost:
+    """Bytes and time to move ownership between stage groupings."""
+    moves = migration_plan(old_bounds, new_bounds, n_layers)
+    cb = len(moves) * cache_bytes_per_layer
+    pb = len(moves) * param_bytes_per_layer
+    t = (cb + pb) / link_bw
+    # delta pass: tokens decoded during transfer need re-sync (Eq. 10 mask)
+    delta_tokens = max(int(t * decode_rate), inflight_tokens)
+    delta = delta_tokens * cache_bytes_per_layer / max(link_bw, 1.0) \
+        * len(moves) / max(n_layers, 1)
+    return MigrationCost(moved_layers=moves, cache_bytes_moved=cb,
+                         param_bytes_moved=pb, transfer_s=t,
+                         delta_sync_s=delta)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — the controller loop
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RefactorDecision:
+    target: GranularityProfile
+    changed: bool
+    score_s: float                        # decision latency (paper: <5 ms)
+    reason: str
+
+
+class RefactoringController:
+    """Algorithm 1: continuous monitoring + proactive granularity selection.
+
+    hysteresis: a switch must win by `switch_margin` and survive
+    `cooldown_s` since the last switch (avoids oscillation — the sigmoid
+    of Eq. 11 plays the same role for scaling)."""
+
+    def __init__(self, profiles: list[GranularityProfile], *,
+                 alpha: float = 0.5, sigma: float = 1.0,
+                 switch_margin: float = 0.05, cooldown_s: float = 10.0):
+        assert profiles, "need at least one granularity profile"
+        self.profiles = profiles
+        self.alpha = alpha
+        self.sigma = sigma
+        self.switch_margin = switch_margin
+        self.cooldown_s = cooldown_s
+        self.monitor = CVMonitor()
+        self.current = profiles[0]
+        self._last_switch = -math.inf
+        self.history: list[tuple[float, int]] = []
+
+    def record_arrival(self, t: float) -> None:
+        self.monitor.record(t)
+
+    def step(self, now: float, queue_len: float = 0.0) -> RefactorDecision:
+        import time as _time
+        t0 = _time.perf_counter()
+        est = self.monitor.estimate(now)
+        vel = self.monitor.velocity(now)
+        # proactive: extrapolate CV half a window ahead using the intensity
+        # gradient sign (paper: "anticipate traffic shifts")
+        cv_eff = est.cv * (1.15 if vel > 0 else 1.0)
+        best = select(self.profiles, cv_eff, alpha=self.alpha,
+                      sigma=self.sigma)
+        changed = False
+        if best.stages != self.current.stages:
+            from repro.core.granularity import score as _score
+            t_max = max(p.throughput for p in self.profiles)
+            l_min = min(p.latency for p in self.profiles)
+            s_new = _score(best, cv_eff, t_max=t_max, l_min=l_min,
+                           alpha=self.alpha, sigma=self.sigma)
+            s_cur = _score(self.current, cv_eff, t_max=t_max, l_min=l_min,
+                           alpha=self.alpha, sigma=self.sigma)
+            if (s_new > s_cur * (1 + self.switch_margin)
+                    and now - self._last_switch >= self.cooldown_s):
+                changed = True
+                self.current = best
+                self._last_switch = now
+                self.history.append((now, best.stages))
+        dt = _time.perf_counter() - t0
+        return RefactorDecision(
+            target=self.current, changed=changed, score_s=dt,
+            reason=f"cv={est.cv:.2f} vel={vel:+.2f} q={queue_len:.0f} "
+                   f"-> S={self.current.stages}")

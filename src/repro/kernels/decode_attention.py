@@ -1,0 +1,103 @@
+"""Flash-decode Pallas TPU kernel: one query token against a long KV cache.
+
+Decode attention is HBM-bandwidth bound (the roofline's memory term for
+decode_32k/long_500k): the kernel streams the cache through VMEM in blocks,
+keeping the online-softmax state for all G query heads of one kv head in
+scratch.  Grid = (batch·kv_heads, n_cache_blocks) — innermost sequential.
+
+cache_len masking supports ragged batches (continuous batching engine).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+f32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, bk: int, n_blocks: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(f32) * scale            # (G, hd)
+    k = k_ref[0].astype(f32)                    # (BK, hd)
+    v = v_ref[0].astype(f32)                    # (BK, hdv)
+    s = q @ k.T                                  # (G, BK)
+
+    cache_len = len_ref[0]
+    pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = pos < cache_len
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     scale: float | None = None, block_k: int = 512,
+                     interpret: bool = True):
+    """q: (B, H, hd); caches: (B, Kh, Smax, hd/hdv); cache_len: scalar or (B,).
+
+    Returns (B, H, hdv)."""
+    B, H, hd = q.shape
+    Kh, Smax = k_cache.shape[1], k_cache.shape[2]
+    hdv = v_cache.shape[-1]
+    G = H // Kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    bk = min(block_k, Smax)
+    nk = math.ceil(Smax / bk)
+    pk = nk * bk - Smax
+    kc = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else k_cache
+    vc = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else v_cache
+
+    qh = q.reshape(B * Kh, G, hd)
+    kh = kc.reshape(B * Kh, nk * bk, hd)
+    vh = vc.reshape(B * Kh, nk * bk, hdv)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,)) \
+        if jnp.asarray(cache_len).ndim <= 1 else cache_len
+    cl = jnp.repeat(cl.reshape(B), Kh).reshape(B * Kh, 1)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk,
+                               n_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Kh, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, j: (h, 0)),
+            pl.BlockSpec((1, G, hd), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, hdv), lambda h, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hdv), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Kh, G, hdv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), f32),
+            pltpu.VMEM((G, 1), f32),
+            pltpu.VMEM((G, hdv), f32),
+        ],
+        interpret=interpret,
+    )(cl, qh, kh, vh)
+    return out.reshape(B, H, hdv)

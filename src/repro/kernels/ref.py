@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (independent, naive
+implementations — materialized score matrices, sequential recurrences)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Naive attention. q: (B,Sq,H,hd); k/v: (B,Skv,Kh,hd_{k,v})."""
+    B, Sq, H, hd = q.shape
+    Skv, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = q.astype(f32).reshape(B, Sq, Kh, G, hd)
+    s = jnp.einsum("bqhgk,bjhk->bhgqj", qf * scale, k.astype(f32))
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        off = Skv - Sq           # queries at the END of the kv span
+        mask &= kj <= (qi + off)
+        if window:
+            mask &= kj > (qi + off - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqj,bjhk->bqhgk", p, v.astype(f32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, scale=None):
+    """q: (B,H,hd); caches: (B,Kh,Smax,hd); cache_len scalar or (B,)."""
+    B, H, hd = q.shape
+    Kh, Smax = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = (q.astype(f32) * scale).reshape(B, Kh, G, hd)
+    s = jnp.einsum("bhgk,bhjk->bhgj", qf, k_cache.astype(f32))
+    cl = jnp.asarray(cache_len)
+    pos = jnp.arange(Smax)
+    if cl.ndim == 1:
+        mask = pos[None, None, None, :] < cl[:, None, None, None]
+    else:
+        mask = (pos < cl)[None, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgj,bhjk->bhgk", p, v_cache.astype(f32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, state0=None):
+    """RWKV6 recurrence. r,k,v,w: (B,S,H,hd); u: (H,hd).
+
+    y_t = r_t · (S_{t-1} + diag(u)(k_t ⊗ v_t));  S_t = diag(w_t) S_{t-1} + k_t⊗v_t
+    Returns (y (B,S,H,hd), final state (B,H,hd,hd))."""
+    B, S, H, hd = r.shape
+    st = state0.astype(f32) if state0 is not None else jnp.zeros((B, H, hd, hd), f32)
+
+    def step(st, t):
+        r_t, k_t, v_t, w_t = t
+        a = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, st + u[None, :, :, None] * a)
+        st = w_t[..., :, None] * st + a
+        return st, y
+
+    stT, ys = jax.lax.scan(
+        step, st, tuple(x.astype(f32).transpose(1, 0, 2, 3)
+                        for x in (r, k, v, w)))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), stT

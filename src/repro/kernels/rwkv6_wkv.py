@@ -1,0 +1,102 @@
+"""RWKV6 WKV recurrence Pallas TPU kernel.
+
+The WKV scan is the RWKV hot spot: per (batch, head), state (hd×hd) evolves
+as  S_t = diag(w_t)·S_{t-1} + k_t⊗v_t,  y_t = r_t·(S_{t-1} + diag(u)k_t⊗v_t).
+
+TPU adaptation: the state matrix lives in VMEM scratch across time blocks
+(grid = (B·H, n_time_blocks), innermost sequential); within a block the
+recurrence runs as an unrolled fori_loop over rows of the (BT, hd) r/k/v/w
+tiles — outer products hit the MXU as rank-1 updates batched per row.
+hd = 64 ⇒ the state tile is 16 KB f32; r/k/v/w blocks (BT=128, 64) add
+128 KB — comfortably inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+f32 = jnp.float32
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, st_out_ref,
+                state_ref, *, bt: int, n_blocks: int, seq: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(f32)        # (BT, hd)
+    k = k_ref[0].astype(f32)
+    v = v_ref[0].astype(f32)
+    w = w_ref[0].astype(f32)
+    u = u_ref[0].astype(f32)        # (1, hd) -> broadcast
+
+    def step(t, carry):
+        state, ys = carry
+        a = k[t][:, None] * v[t][None, :]            # (hd, hd) rank-1
+        y = r[t] @ (state + u.T * a)                 # (hd,)
+        state = w[t][:, None] * state + a
+        ys = ys.at[t].set(y)
+        return state, ys
+
+    state0 = state_ref[...]
+    ys0 = jnp.zeros((bt, r.shape[1]), f32)
+    state, ys = jax.lax.fori_loop(0, bt, step, (state0, ys0))
+    y_ref[0] = ys.astype(y_ref.dtype)
+    state_ref[...] = state
+
+    @pl.when(ti == n_blocks - 1)
+    def _emit_state():
+        st_out_ref[0] = state_ref[...].astype(st_out_ref.dtype)
+
+
+def wkv6(r, k, v, w, u, *, block_t: int = 128, interpret: bool = True):
+    """r,k,v,w: (B, S, H, hd); u: (H, hd).
+
+    Returns (y (B,S,H,hd), final state (B,H,hd,hd))."""
+    B, S, H, hd = r.shape
+    bt = min(block_t, S)
+    nt = math.ceil(S / bt)
+    pt = nt * bt - S
+
+    def prep(x):
+        xp = jnp.pad(x, ((0, 0), (0, pt), (0, 0), (0, 0))) if pt else x
+        return xp.transpose(0, 2, 1, 3).reshape(B * H, nt * bt, hd)
+
+    rh, kh, vh = prep(r), prep(k), prep(v)
+    # pad w with ones (decay 1 = identity) so padded steps don't alter state
+    wp = jnp.pad(w, ((0, 0), (0, pt), (0, 0), (0, 0)),
+                 constant_values=1.0) if pt else w
+    wh = wp.transpose(0, 2, 1, 3).reshape(B * H, nt * bt, hd)
+    uh = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+
+    kernel = functools.partial(_wkv_kernel, bt=bt, n_blocks=nt, seq=S)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(B * H, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, hd), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, bt, hd), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, bt, hd), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, bt, hd), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, 1, hd), lambda h, t: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, hd), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, hd, hd), lambda h, t: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, nt * bt, hd), r.dtype),
+            jax.ShapeDtypeStruct((B * H, hd, hd), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), f32)],
+        interpret=interpret,
+    )(rh, kh, vh, wh, uh)
+    y = y.reshape(B, H, nt * bt, hd)[:, :, :S].transpose(0, 2, 1, 3)
+    return y, st.reshape(B, H, hd, hd)

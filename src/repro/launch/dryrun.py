@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory / cost / collective schedule, and emit
+the roofline table (EXPERIMENTS.md §Dry-run and §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b
+    PYTHONPATH=src python -m repro.launch.dryrun --shape train_4k --multipod
+    PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from collections import Counter
+
+import jax
+
+from repro.configs.base import SHAPES, get_arch, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import hbm_footprint, step_costs
+
+GB = 1024 ** 3
+
+_COLL_RE = re.compile(
+    r"(\w*)\s*=\s*(\S+)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|pred)\[([\d,]*)\]")
+
+
+def hlo_collectives(hlo_text: str) -> dict:
+    """Collective op census from HLO text: kind -> [(bytes, count)].
+
+    NOTE: ops inside while bodies appear once; totals need the statically
+    known trip counts (tick loop, pps scan) — we therefore report the
+    per-occurrence schedule, which the analytic model cross-checks.
+    """
+    dsizes = {"bf16": 2, "f32": 4, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+              "pred": 1}
+    out = Counter()
+    bytes_by_kind = Counter()
+    for line in hlo_text.splitlines():
+        m = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(", line)
+        if not m or "-done" in line:
+            continue
+        kind = m.group(1)
+        sm = _SHAPE_RE.search(line)
+        nbytes = 0
+        if sm:
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for x in dims.split(","):
+                if x:
+                    n *= int(x)
+            nbytes = n * dsizes[dt]
+        out[kind] += 1
+        bytes_by_kind[kind] += nbytes
+    return {"counts": dict(out), "bytes_once": dict(bytes_by_kind)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    spec = get_arch(arch)
+    cfg, shape = spec.config, SHAPES[shape_name]
+    plan = spec.plan_for(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pod = 2 if multi_pod else 1
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "plan": {"S": plan.stages, "T": plan.tensor, "R": plan.replica,
+                    "M": plan.microbatches, "fsdp": plan.fsdp,
+                    "sp": plan.seq_parallel_kv}}
+    if shape_name in spec.skip_shapes:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = "see DESIGN.md §5 (arch-applicability)"
+        return rec
+    try:
+        from repro.parallel.pipeline import (
+            build_decode_step, build_prefill_step, build_train_step)
+        t0 = time.time()
+        if shape.kind == "train":
+            step, st = build_train_step(cfg, plan, mesh, shape)
+            args = (st["params"], st["opt"], st["batch"])
+        elif shape.kind == "prefill":
+            step, st = build_prefill_step(cfg, plan, mesh, shape)
+            args = (st["params"], st["batch"])
+        else:
+            step, st = build_decode_step(cfg, plan, mesh, shape)
+            args = (st["params"], st["cache"], st["tokens"], st["pos"])
+        lowered = step.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        colls = hlo_collectives(txt)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory_analysis": {
+                "argument_gb": ma.argument_size_in_bytes / GB,
+                "output_gb": ma.output_size_in_bytes / GB,
+                "temp_gb": ma.temp_size_in_bytes / GB,
+                "alias_gb": ma.alias_size_in_bytes / GB,
+            },
+            "cost_analysis_flops_loop_body_once": ca.get("flops"),
+            "hlo_collectives": colls,
+        })
+        rec["roofline"] = step_costs(cfg, shape, plan, pod=pod)
+        rec["hbm_analytic"] = hbm_footprint(cfg, shape, plan, pod=pod)
+        if verbose:
+            r = rec["roofline"]
+            h = rec["hbm_analytic"]
+            print(f"  OK lower={t_lower:.1f}s compile={t_compile:.1f}s | "
+                  f"compute={r['compute_s']*1e3:.1f}ms mem={r['memory_s']*1e3:.1f}ms "
+                  f"coll={r['collective_s']*1e3:.1f}ms dom={r['dominant']} "
+                  f"bubble={r['bubble_fraction']:.2f} | hbm={h['total_gb']:.1f}GB "
+                  f"args={ma.argument_size_in_bytes/GB:.1f}GB")
+            print(f"     collectives(once): {colls['counts']}")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"  ERROR {type(e).__name__}: {str(e)[:200]}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true",
+                    help="run only the 2x16x16 mesh (default: both)")
+    ap.add_argument("--singlepod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True]
+    if args.multipod:
+        meshes = [True]
+    elif args.singlepod:
+        meshes = [False]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                print(f"[{'2x16x16' if mp else '16x16'}] {arch} × {shape}")
+                results.append(run_cell(arch, shape, mp))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    # merge with existing results (re-runs overwrite matching cells)
+    existing = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            existing = json.load(f)
+    key = lambda r: (r["arch"], r["shape"], r["mesh"])  # noqa: E731
+    merged = {key(r): r for r in existing}
+    for r in results:
+        r.pop("traceback", None)
+        merged[key(r)] = r
+    with open(args.out, "w") as f:
+        json.dump(list(merged.values()), f, indent=1)
+
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}")
+    if n_err:
+        for r in results:
+            if r["status"] == "error":
+                print(f"  FAIL {r['arch']} × {r['shape']} [{r['mesh']}]: "
+                      f"{r['error'][:160]}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

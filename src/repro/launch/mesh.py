@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as functions (not module-level constants) so importing never touches
+jax device state.  The dry-run sets XLA_FLAGS for 512 host devices BEFORE
+importing this module (launch/dryrun.py lines 1-2).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many local devices exist (tests/engine)."""
+    n = len(jax.devices())
+    assert data * model <= n, f"need {data*model} devices, have {n}"
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

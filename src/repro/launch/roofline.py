@@ -1,0 +1,326 @@
+"""Analytic roofline model: exact FLOPs / HBM bytes / collective bytes per
+(arch × shape × plan × mesh), cross-checked against the compiled HLO.
+
+Why analytic: XLA cost_analysis() on this CPU container counts while/scan
+bodies ONCE (verified: a 15-tick × 4-layer pipeline reports one layer's
+FLOPs), so compiled totals are not usable directly.  We know every einsum in
+the model code and every collective the pipeline issues, so we count them
+exactly and validate the per-tick schedule against the HLO text
+(see hlo_collectives / crosscheck in dryrun.py).
+
+Hardware: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Cross-pod (DCN) reductions are reported separately at an assumed 6.25 GB/s
+per host pair.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.configs.base import (
+    MIXER_ATTN, MIXER_CROSS, MIXER_MAMBA, MIXER_MLA, MIXER_RWKV, MLP_MOE,
+    ModelConfig, PipelinePlan, ShapeConfig)
+from repro.models.ssm import mamba_dims, rwkv_dims
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+DCN_BW = 6.25e9              # assumed cross-pod bytes/s
+BYTES = 2                    # bf16
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0          # per device per step
+    hbm_bytes: float = 0.0      # per device per step
+    ici_bytes: float = 0.0      # per device per step (on-pod collectives)
+    dcn_bytes: float = 0.0      # per device per step (cross-pod)
+    notes: list = field(default_factory=list)
+
+    def add(self, other: "Costs"):
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        self.ici_bytes += other.ici_bytes
+        self.dcn_bytes += other.dcn_bytes
+
+
+def _ring_ar(bytes_: float, n: int) -> float:
+    """Per-device wire bytes of a ring all-reduce over n devices."""
+    return 2 * (n - 1) / n * bytes_ if n > 1 else 0.0
+
+
+def _ring_ag(bytes_full: float, n: int) -> float:
+    """Per-device wire bytes of an all-gather producing bytes_full."""
+    return (n - 1) / n * bytes_full if n > 1 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Per-layer compute/memory (forward, per token-batch of `tok` tokens,
+# attention context length `ctx`; local = per-device under T-way TP)
+# ---------------------------------------------------------------------------
+
+def layer_fwd(cfg: ModelConfig, j: int, tok: int, ctx: int, T: int,
+              decode: bool) -> Costs:
+    """One layer's forward cost on ONE device (T-way tensor parallel)."""
+    c = Costs()
+    d = cfg.d_model
+    kind = cfg.layer_kind(j)
+    hd = cfg.resolved_head_dim
+    Hl = cfg.n_heads // T if cfg.n_heads % T == 0 else cfg.n_heads
+    Khl = cfg.n_kv_heads // T if cfg.n_kv_heads % T == 0 else cfg.n_kv_heads
+
+    if kind.mixer == MIXER_ATTN or kind.mixer == MIXER_CROSS:
+        # q/k/v/o projections
+        c.flops += 2 * tok * d * (Hl + 2 * Khl + Hl) * hd
+        attn_ctx = ctx
+        if (cfg.sliding_window and not cfg.is_global_layer(j)
+                and kind.mixer == MIXER_ATTN):
+            attn_ctx = min(ctx, cfg.sliding_window)
+        if kind.mixer == MIXER_CROSS:
+            attn_ctx = cfg.n_memory_tokens or ctx
+        # scores + weighted sum (causal halves prefill ctx on average)
+        causal_frac = 0.5 if (not decode and kind.mixer == MIXER_ATTN) else 1.0
+        c.flops += 2 * 2 * tok * Hl * hd * attn_ctx * causal_frac
+        if decode:
+            # per decode step each of `tok` requests reads its full k+v cache
+            c.hbm_bytes += 2 * Khl * attn_ctx * hd * BYTES * tok
+    elif kind.mixer == MIXER_MLA:
+        m = cfg.mla
+        Hl = cfg.n_heads // T
+        c.flops += 2 * tok * d * m.q_lora_rank                     # q down
+        c.flops += 2 * tok * m.q_lora_rank * Hl * (m.nope_head_dim + m.rope_head_dim)
+        c.flops += 2 * tok * d * (m.kv_lora_rank + m.rope_head_dim)  # kv down
+        if decode:
+            # absorbed: q_lat = q @ Wk_up ; scores vs latent; o_lat @ Wv_up
+            c.flops += 2 * tok * Hl * m.nope_head_dim * m.kv_lora_rank
+            c.flops += 2 * 2 * tok * Hl * ctx * (m.kv_lora_rank + m.rope_head_dim)
+            c.flops += 2 * tok * Hl * m.kv_lora_rank * m.v_head_dim
+            c.hbm_bytes += ctx * (m.kv_lora_rank + m.rope_head_dim) * BYTES * tok
+        else:
+            # materialized k/v up-projections + flash attention
+            c.flops += 2 * tok * m.kv_lora_rank * Hl * (m.nope_head_dim + m.v_head_dim)
+            c.flops += 2 * 2 * tok * Hl * (m.nope_head_dim + m.rope_head_dim) * ctx * 0.5
+        c.flops += 2 * tok * Hl * m.v_head_dim * d                 # out proj
+    elif kind.mixer == MIXER_MAMBA:
+        di, dtr, N, dc = mamba_dims(cfg)
+        dil = di // T
+        c.flops += 2 * tok * d * 2 * dil                           # w_x, w_z
+        c.flops += 2 * tok * dil * dc                              # conv
+        c.flops += 2 * tok * dil * (dtr + 2 * N)                   # x_proj
+        c.flops += 2 * tok * dtr * dil                             # dt_proj
+        c.flops += tok * dil * N * 6                               # scan math
+        c.flops += 2 * tok * dil * d                               # out proj
+    elif kind.mixer == MIXER_RWKV:
+        H, hs = rwkv_dims(cfg)
+        dl = d // T
+        c.flops += 2 * tok * d * dl * 4                            # r,k,v,g
+        c.flops += 2 * tok * d * (cfg.ssm.decay_lora + 5 * cfg.ssm.mix_lora) * 2
+        c.flops += tok * (dl * hs) * 4                             # wkv recurrence
+        c.flops += 2 * tok * dl * d                                # out proj
+        # channel mix
+        ffl = cfg.d_ff // T
+        c.flops += 2 * tok * d * ffl + 2 * tok * ffl * d + 2 * tok * d * d
+    if kind.extra_cross:
+        Hl = cfg.n_heads // T if cfg.n_heads % T == 0 else cfg.n_heads
+        mem = ctx
+        c.flops += 2 * tok * d * 2 * Hl * hd                       # q, o
+        c.flops += 2 * 2 * tok * Hl * hd * mem
+        if decode:
+            c.hbm_bytes += 2 * Khl * mem * hd * BYTES * tok
+
+    # MLP
+    if kind.mixer != MIXER_RWKV:
+        if kind.mlp == MLP_MOE:
+            mo = cfg.moe
+            E_loc = max(mo.n_experts // T, 1)
+            cap_tok = tok * mo.top_k / (1 if T == 1 else T) * mo.capacity_factor
+            # dispatch/combine einsums + expert FFN on capacity tokens
+            c.flops += 2 * tok * E_loc * max(
+                int(math.ceil(tok * mo.top_k / mo.n_experts * mo.capacity_factor)), 4) * 2
+            c.flops += 3 * 2 * cap_tok * cfg.d_model * mo.d_expert
+            if mo.n_shared:
+                fs = mo.n_shared * mo.d_expert // (T if (mo.n_shared * mo.d_expert) % T == 0 else 1)
+                c.flops += 3 * 2 * tok * cfg.d_model * fs
+            c.flops += 2 * tok * cfg.d_model * mo.n_experts       # router
+        else:
+            ffl = cfg.d_ff // T if cfg.d_ff % T == 0 else cfg.d_ff
+            n_mat = 2 if cfg.mlp_act == "gelu" else 3
+            c.flops += n_mat * 2 * tok * cfg.d_model * ffl
+    return c
+
+
+def layer_param_bytes(cfg: ModelConfig, j: int, T: int) -> float:
+    """Per-device parameter bytes of layer j under T-way TP (bf16)."""
+    from repro.models.transformer import init_block
+    import jax
+    import jax.numpy as jnp
+    kind = cfg.layer_kind(j)
+    shapes = jax.eval_shape(
+        lambda: init_block(jax.random.PRNGKey(0), cfg, kind, jnp.bfloat16))
+    total = 0
+    for leaf in jax.tree.leaves(shapes):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n * BYTES
+    return total / T            # T-way split (approx: most params shard)
+
+
+# ---------------------------------------------------------------------------
+# Whole-step roofline
+# ---------------------------------------------------------------------------
+
+def step_costs(cfg: ModelConfig, shape: ShapeConfig, plan: PipelinePlan,
+               pod: int = 1, data: int = 16) -> dict:
+    """Per-device costs + roofline terms for one step (train or serve)."""
+    S, T, R, M = plan.stages, plan.tensor, plan.replica, plan.microbatches
+    decode = shape.is_decode
+    dp = pod * data * R
+    if plan.seq_parallel_kv or shape.global_batch < dp:
+        Bl = shape.global_batch          # replicated batch (SP / tiny batch)
+    else:
+        Bl = shape.global_batch // dp
+    Bm = max(Bl // M, 1)
+    Sq = 1 if decode else shape.seq_len
+    ctx = shape.seq_len
+    tok = Bm * Sq
+    n_ticks = M + S - 1
+    pps = cfg.n_patterns // S
+    d = cfg.d_model
+
+    c = Costs()
+    kv_scale = 0.5 if plan.kv_dtype == "fp8" else 1.0
+    # --- per-tick stage compute
+    stage = Costs()
+    for p in range(pps):
+        for j in range(cfg.pattern_size):
+            lc = layer_fwd(cfg, j, tok, ctx, T, decode)
+            lc.hbm_bytes *= kv_scale          # decode hbm = cache reads
+            if plan.seq_parallel_kv and cfg.layer_kind(j).mixer == MIXER_ATTN \
+               and cfg.is_global_layer(j):
+                lc.hbm_bytes /= data      # cache sharded over data (SP)
+                lc.flops -= 0             # score flops also split
+            stage.add(lc)
+    # whisper encoder (S=1): runs once per tick on the current microbatch
+    if cfg.encoder_layers and not decode:
+        enc = Costs()
+        for _ in range(cfg.encoder_layers):
+            enc.add(layer_fwd(cfg, 0, tok, Sq, T, False))
+        stage.add(enc)
+
+    fwd_mult = 1.0
+    if shape.kind == "train":
+        # bwd = 2x fwd matmuls; tick-remat recomputes fwd once more
+        fwd_mult = 4.0 if plan.remat else 3.0
+    c.flops += stage.flops * n_ticks * fwd_mult
+    c.hbm_bytes += stage.hbm_bytes * n_ticks * (2.0 if shape.kind == "train" else 1.0)
+
+    # --- param HBM traffic: stage params re-read per tick (+bwd passes)
+    stage_pbytes = sum(layer_param_bytes(cfg, j, T)
+                       for j in range(cfg.pattern_size)) * pps
+    c.hbm_bytes += stage_pbytes * n_ticks * fwd_mult
+    # --- activation HBM traffic: ~4 bytes-moves per layer boundary
+    act_bytes = tok * d * BYTES
+    c.hbm_bytes += act_bytes * 4 * pps * cfg.pattern_size * n_ticks * fwd_mult
+
+    # --- embed/head
+    Vloc = cfg.vocab_size // (S * T)
+    c.flops += 2 * tok * d * Vloc * n_ticks * (fwd_mult if shape.kind == "train" else 1.0)
+    c.hbm_bytes += Vloc * d * BYTES * n_ticks
+
+    # --- collectives (per device)
+    # ppermute stage rotation: one send per tick
+    if S > 1:
+        c.ici_bytes += act_bytes * n_ticks
+        # emit broadcast (psum over stage) per tick
+        c.ici_bytes += _ring_ar(act_bytes, S) * n_ticks
+        # embed psum over VP axes per tick
+        c.ici_bytes += _ring_ar(act_bytes, S * T) * n_ticks
+    # TP psums: per layer per tick (2 psums for rwkv/mamba-ish, else 2)
+    if T > 1:
+        psums_per_layer = 2
+        c.ici_bytes += _ring_ar(act_bytes, T) * psums_per_layer \
+            * pps * cfg.pattern_size * n_ticks * (fwd_mult if shape.kind == "train" else 1.0)
+    # SP decode combine
+    if plan.seq_parallel_kv:
+        n_global_attn = sum(
+            1 for p in range(pps) for j in range(cfg.pattern_size)
+            if cfg.layer_kind(j).mixer == MIXER_ATTN and cfg.is_global_layer(j))
+        c.ici_bytes += _ring_ar(tok * cfg.n_heads // max(T, 1) * cfg.resolved_head_dim
+                                * 4, data) * n_global_attn * n_ticks
+
+    if shape.kind == "train":
+        # fsdp: per-layer all-gather per tick (fwd + bwd re-gather) and
+        # one reduce-scatter per step; else full grad all-reduce over data
+        params_all = sum(layer_param_bytes(cfg, j, T)
+                         for j in range(cfg.pattern_size)) * pps
+        if plan.fsdp:
+            g_scale = 0.5 if plan.fsdp_fp8_gather else 1.0
+            c.ici_bytes += _ring_ag(params_all, data) * n_ticks * 2 * g_scale
+            c.ici_bytes += _ring_ar(params_all * 2, data) / 2     # reduce-scatter f32
+        else:
+            c.ici_bytes += _ring_ar(params_all * 2, data)         # grad AR f32... bf16*2
+        if pod > 1:
+            c.dcn_bytes += _ring_ar(params_all, pod)              # cross-pod grads
+        # embed/head grads
+        c.ici_bytes += _ring_ar(Vloc * d * BYTES, data)
+
+    # --- roofline terms (seconds)
+    compute_t = c.flops / PEAK_FLOPS
+    memory_t = c.hbm_bytes / HBM_BW
+    coll_t = c.ici_bytes / ICI_BW + c.dcn_bytes / DCN_BW
+    bubble = (S - 1) / n_ticks
+
+    # MODEL_FLOPS: useful work for the global step, per device
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    chips = pod * data * 16
+    global_tokens = shape.global_batch * Sq
+    if shape.kind == "train":
+        model_flops = 6 * n_active * global_tokens / chips
+    else:
+        model_flops = 2 * n_active * global_tokens / chips
+
+    dom = max((compute_t, "compute"), (memory_t, "memory"), (coll_t, "collective"))
+    return {
+        "flops": c.flops, "hbm_bytes": c.hbm_bytes,
+        "ici_bytes": c.ici_bytes, "dcn_bytes": c.dcn_bytes,
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "dominant": dom[1], "bubble_fraction": bubble,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(c.flops, 1.0),
+        "step_time_lower_bound_s": max(compute_t, memory_t, coll_t) / max(1e-9, (1 - bubble) if shape.kind != "train" else 1.0),
+    }
+
+
+def hbm_footprint(cfg: ModelConfig, shape: ShapeConfig, plan: PipelinePlan,
+                  pod: int = 1, data: int = 16) -> dict:
+    """Analytic persistent HBM per device (TPU buffer-packing assumption)."""
+    S, T, R, M = plan.stages, plan.tensor, plan.replica, plan.microbatches
+    n_params = cfg.param_count()
+    pbytes = n_params * BYTES / (S * T) / (data if plan.fsdp else 1)
+    opt = 2 * n_params * 4 / (S * T) / (data if plan.fsdp else 1) \
+        if shape.kind == "train" else 0.0
+    grads = pbytes if shape.kind == "train" else 0.0
+    dp = pod * data * R
+    Bl = shape.global_batch if (plan.seq_parallel_kv or shape.global_batch < dp) \
+        else shape.global_batch // dp
+    Bm = max(Bl // M, 1)
+    Sq = 1 if shape.is_decode else shape.seq_len
+    act_carry = (M + S - 1) * Bm * Sq * cfg.d_model * BYTES if shape.kind == "train" \
+        else Bm * Sq * cfg.d_model * BYTES * 4
+    cache = 0.0
+    if shape.kind != "train":
+        from repro.models.kvcache import cache_bytes, init_cache
+        per_req = cache_bytes(init_cache(cfg, 1, shape.seq_len,
+                                         materialize=False))
+        if plan.kv_dtype == "fp8":
+            per_req /= 2
+        total = per_req * shape.global_batch
+        cache = total / (S * (T if cfg.n_kv_heads % T == 0 else 1)) / \
+            (data if (plan.seq_parallel_kv or shape.global_batch >= dp) else 1) / R
+    total_gb = (pbytes + opt + grads + act_carry + cache) / 1024**3
+    return {"params_gb": pbytes / 1024**3, "opt_gb": opt / 1024**3,
+            "grads_gb": grads / 1024**3, "act_gb": act_carry / 1024**3,
+            "cache_gb": cache / 1024**3, "total_gb": total_gb,
+            "fits_16gb": total_gb < 16.0}

@@ -1,0 +1,59 @@
+"""Serving launcher: run the FlexPipe engine on an arch's smoke config with
+a CV-controlled workload and live refactoring.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --rate 10 --cv 4 --duration 5
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.controller import FlexPipeController
+from repro.core.granularity import GranularityProfile
+from repro.models.transformer import init_model
+from repro.serving.engine import EngineConfig, FlexPipeEngine
+from repro.serving.workload import synth_requests
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--rate", type=float, default=10.0)
+    ap.add_argument("--cv", type=float, default=2.0)
+    ap.add_argument("--duration", type=float, default=5.0)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke_config
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    n = cfg.n_layers
+    profiles = [
+        GranularityProfile(stages=max(n // 4, 1), batch=8, throughput=90,
+                           latency=0.4, cv_opt=0.5),
+        GranularityProfile(stages=max(n // 2, 2), batch=16, throughput=110,
+                           latency=0.6, cv_opt=2.5),
+    ]
+    controller = FlexPipeController(cfg, profiles)
+    eng = FlexPipeEngine(cfg, params,
+                         boundaries=[i * 4 for i in range(max(n // 4, 1))],
+                         ecfg=EngineConfig(max_batch=args.max_batch,
+                                           max_seq=96))
+    rng = np.random.default_rng(0)
+    reqs = synth_requests(rng, rate=args.rate, cv=args.cv,
+                          duration=args.duration, prompt_mean=24,
+                          decode_mean=8)
+    print(f"{cfg.name}: serving {len(reqs)} requests "
+          f"(rate={args.rate}, cv={args.cv})")
+    stats = eng.run(reqs, controller=controller)
+    lat = stats.latency_percentiles()
+    print(f"completed={stats.completed} p50={lat['p50']:.2f}s "
+          f"p99={lat['p99']:.2f}s refactors={len(eng.refactor_events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Training launcher: --arch <id> [--smoke] pipeline training with
+checkpoint/restart.  On this container use --smoke (reduced config, 8 host
+devices); full configs are exercised through launch/dryrun.py.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --steps 50
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PipelinePlan, ShapeConfig, get_arch
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.transformer import init_model
+from repro.parallel.pipeline import build_train_step, stack_params
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke_config if args.smoke else spec.config
+    S = 1 if cfg.encoder_layers else min(2, cfg.n_patterns)
+    plan = PipelinePlan(stages=S, tensor=2, replica=4 // (S * 2) or 1,
+                        microbatches=1)
+    # normalize S*T*R to 4 for the local mesh
+    plan = PipelinePlan(stages=S, tensor=2, replica=max(4 // (S * 2), 1),
+                        microbatches=1)
+    mesh = make_local_mesh(data=2, model=4)
+    shape = ShapeConfig("train", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    data = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    global_batch=args.batch))
+    params = stack_params(cfg, plan,
+                          init_model(jax.random.PRNGKey(0), cfg, jnp.float32))
+    opt = init_opt_state(params)
+    step_fn, _ = build_train_step(cfg, plan, mesh, shape,
+                                  AdamWConfig(lr=1e-3, warmup_steps=10,
+                                              total_steps=args.steps),
+                                  param_dtype=jnp.float32)
+    for step in range(args.steps):
+        b = data.batch(step)
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "labels": jnp.asarray(b["labels"])}
+        if cfg.encoder_layers:
+            batch["frames"] = jnp.zeros((args.batch, args.seq, cfg.d_model))
+        if cfg.n_memory_tokens and not cfg.encoder_layers:
+            batch["memory"] = jnp.zeros(
+                (args.batch, cfg.n_memory_tokens, cfg.d_model))
+        params, opt, m = step_fn(params, opt, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(m['loss']):.4f}")
+        if args.ckpt and step and step % 25 == 0:
+            ckpt.save(args.ckpt, (params, opt), step=step)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""KV/state cache construction, sizing, and stage-regrouping utilities.
+
+The cache for a model is a list of per-layer cache pytrees (kind-dependent).
+FlexPipe's inflight refactoring regroups per-layer caches between stage
+boundaries; helpers here implement the regrouping and byte accounting used by
+the consistency protocol (Eq. 10) and the simulator's transfer-cost model.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    MIXER_ATTN, MIXER_CROSS, MIXER_MAMBA, MIXER_MLA, MIXER_RWKV, ModelConfig)
+from repro.models.ssm import mamba_dims, rwkv_dims
+
+
+def layer_cache_struct(cfg: ModelConfig, layer_idx: int, batch: int,
+                       max_seq: int, dtype=jnp.bfloat16,
+                       tensor_shards: int = 1) -> dict:
+    """ShapeDtypeStructs for one layer's cache (local shapes under TP)."""
+    kind = cfg.layer_kind(layer_idx)
+    T = tensor_shards
+    hd = cfg.resolved_head_dim
+    out: dict = {}
+    if kind.mixer == MIXER_ATTN:
+        kh = max(cfg.n_kv_heads // T, 1)
+        seq = max_seq
+        if cfg.sliding_window and not cfg.is_global_layer(layer_idx):
+            seq = min(max_seq, cfg.sliding_window)
+        out["mixer"] = {
+            "k": jax.ShapeDtypeStruct((batch, kh, seq, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, kh, seq, hd), dtype)}
+    elif kind.mixer == MIXER_MLA:
+        m = cfg.mla
+        out["mixer"] = {
+            "latent": jax.ShapeDtypeStruct((batch, max_seq, m.kv_lora_rank), dtype),
+            "k_rope": jax.ShapeDtypeStruct((batch, max_seq, m.rope_head_dim), dtype)}
+    elif kind.mixer == MIXER_MAMBA:
+        di, _, N, dc = mamba_dims(cfg)
+        di = di // T
+        out["mixer"] = {
+            "conv": jax.ShapeDtypeStruct((batch, dc - 1, di), dtype),
+            "ssm": jax.ShapeDtypeStruct((batch, di, N), dtype)}
+    elif kind.mixer == MIXER_RWKV:
+        H, hs = rwkv_dims(cfg)
+        out["mixer"] = {
+            "sx_tm": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+            "sx_cm": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+            "wkv": jax.ShapeDtypeStruct((batch, H // T, hs, hs), dtype)}
+    elif kind.mixer == MIXER_CROSS:
+        kh = max(cfg.n_kv_heads // T, 1)
+        out["mixer"] = {
+            "k": jax.ShapeDtypeStruct((batch, kh, cfg.n_memory_tokens, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, kh, cfg.n_memory_tokens, hd), dtype)}
+    if kind.extra_cross:
+        kh = max(cfg.n_kv_heads // T, 1)
+        # enc-dec: cross memory = encoder output, whose length tracks the
+        # shape's seq_len (backbone-level frames stub)
+        mem = max_seq if cfg.encoder_layers else (cfg.n_memory_tokens or max_seq)
+        out["cross"] = {
+            "k": jax.ShapeDtypeStruct((batch, kh, mem, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, kh, mem, hd), dtype)}
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, layers: Optional[range] = None,
+               tensor_shards: int = 1, materialize: bool = True) -> list:
+    """Zero caches for ``layers`` (default: all)."""
+    layers = layers if layers is not None else range(cfg.n_layers)
+    structs = [layer_cache_struct(cfg, i, batch, max_seq, dtype, tensor_shards)
+               for i in layers]
+    if not materialize:
+        return structs
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), structs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_bytes(tree) -> int:
+    leaves = jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Stage regrouping (inflight refactoring support)
+# ---------------------------------------------------------------------------
+
+def group_by_stage(per_layer: list, boundaries: list[int]) -> list[list]:
+    """Split a per-layer list into per-stage lists at ``boundaries``.
+
+    boundaries: stage start indices, e.g. [0, 8, 16, 24] for 4 stages of a
+    32-layer model.  Returns list of per-stage sublists.
+    """
+    ends = boundaries[1:] + [len(per_layer)]
+    return [per_layer[b:e] for b, e in zip(boundaries, ends)]
+
+
+def regroup(per_stage: list[list], new_boundaries: list[int]) -> list[list]:
+    """Re-split stage-grouped caches to new boundaries (refactoring move)."""
+    flat = [c for stage in per_stage for c in stage]
+    return group_by_stage(flat, new_boundaries)
+
+
+def migration_plan(old_boundaries: list[int], new_boundaries: list[int],
+                   n_layers: int) -> list[tuple[int, int, int]]:
+    """Which layers move between stages: (layer, old_stage, new_stage).
+
+    Only layers whose owning stage changes need a transfer — the paper's
+    refactoring cost is proportional to Σ bytes of these layers' caches.
+    """
+    def owner(boundaries, layer):
+        s = 0
+        for i, b in enumerate(boundaries):
+            if layer >= b:
+                s = i
+        return s
+    moves = []
+    for l in range(n_layers):
+        o, n = owner(old_boundaries, l), owner(new_boundaries, l)
+        if o != n:
+            moves.append((l, o, n))
+    return moves

@@ -1,0 +1,265 @@
+"""State-space / recurrent mixers: Mamba-1 (Jamba) and RWKV-6 (Finch).
+
+Both expose sequence-mode (scan over time; used for train/prefill) and
+step-mode (O(1) state update; used for decode) through the same apply
+function, switching on ``x.shape[1] == 1 and cache is not None``.
+
+Caches:
+  mamba: {"conv": (B, d_conv-1, d_inner), "ssm": (B, d_inner, d_state)}
+  rwkv:  {"sx_tm": (B, d), "sx_cm": (B, d), "wkv": (B, H, hd, hd)}
+
+Tensor parallelism: the inner/channel dimension is sharded; projections that
+mix the full inner dim (mamba x_proj; rwkv output/ffn-down) psum over
+``tp_axis``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+f32 = jnp.float32
+
+
+def _maybe_psum(x, tp_axis):
+    return jax.lax.psum(x, tp_axis) if tp_axis else x
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_inner, dt_rank, s.d_state, s.d_conv
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di, dtr, N, dc = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=f32)[None, :], (di, 1))
+    ks_extra = jax.random.split(ks[5], 2)
+    return {
+        # separate x / z projections so the inner dim shards cleanly under TP
+        "w_x": jax.random.normal(ks_extra[0], (d, di), dtype) * s,
+        "w_z": jax.random.normal(ks_extra[1], (d, di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (dc, di), dtype) * (1.0 / math.sqrt(dc)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * N), dtype) * (1.0 / math.sqrt(di)),
+        "dt_proj": jax.random.normal(ks[3], (dtr, di), dtype) * (1.0 / math.sqrt(dtr)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, f32))).astype(dtype),
+        "A_log": jnp.log(A).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[4], (di, d), dtype) * (s / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _mamba_core(params, xc, z, cache_ssm, *, tp_axis):
+    """Selective scan. xc: conv'd input (B,S,di); returns (y, last_state)."""
+    B, S, di = xc.shape
+    N = params["A_log"].shape[1]
+    xdbl = jnp.einsum("bsd,dr->bsr", xc, params["x_proj"])
+    xdbl = _maybe_psum(xdbl, tp_axis)       # di is sharded: partial sums
+    dtr = params["dt_proj"].shape[0]
+    dt, Bc, Cc = jnp.split(xdbl, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt, params["dt_proj"])
+                         + params["dt_bias"]).astype(f32)           # (B,S,di)
+    A = -jnp.exp(params["A_log"].astype(f32))                        # (di,N)
+    dA = jnp.exp(dt[..., None] * A)                                  # (B,S,di,N)
+    dBx = (dt * xc.astype(f32))[..., None] * Bc.astype(f32)[:, :, None, :]
+
+    def step(h, t):
+        dA_t, dBx_t, C_t = t
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = cache_ssm.astype(f32) if cache_ssm is not None else jnp.zeros((B, di, N), f32)
+    hT, ys = jax.lax.scan(step, h0,
+                          (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3),
+                           Cc.astype(f32).transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2)                                        # (B,S,di)
+    y = y + params["D"].astype(f32) * xc.astype(f32)
+    y = y * jax.nn.silu(z.astype(f32))
+    return y.astype(xc.dtype), hT.astype(xc.dtype)
+
+
+def apply_mamba(cfg: ModelConfig, params: dict, x: jax.Array, *,
+                cache: Optional[dict] = None, tp_axis: Optional[str] = None,
+                **_):
+    B, S, _ = x.shape
+    di = params["conv_b"].shape[0]
+    dc = params["conv_w"].shape[0]
+    x_in = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"])
+
+    # causal depthwise conv over time
+    if cache is not None:
+        hist = cache["conv"]                       # (B, dc-1, di)
+        xin_ext = jnp.concatenate([hist, x_in], axis=1)
+        new_conv = xin_ext[:, -(dc - 1):, :] if dc > 1 else hist
+    else:
+        xin_ext = jnp.pad(x_in, ((0, 0), (dc - 1, 0), (0, 0)))
+        new_conv = None
+    # window sum: xc[t] = sum_k w[k] * xin_ext[t+k]
+    xc = sum(xin_ext[:, k:k + S, :] * params["conv_w"][k] for k in range(dc))
+    xc = jax.nn.silu(xc + params["conv_b"])
+
+    y, hT = _mamba_core(params, xc, z, cache["ssm"] if cache else None,
+                        tp_axis=tp_axis)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    out = _maybe_psum(out, tp_axis)
+    new_cache = {"conv": new_conv, "ssm": hT} if cache is not None else None
+    return out, new_cache, jnp.zeros((), f32)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+def rwkv_dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    H = cfg.d_model // s.head_size
+    return H, s.head_size
+
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    s: SSMConfig = cfg.ssm
+    H, hd = rwkv_dims(cfg)
+    ks = iter(jax.random.split(key, 32))
+    sc = 1.0 / math.sqrt(d)
+    p = {
+        "maa_x": jnp.zeros((d,), dtype),
+        "tm": {},
+        "w0": jnp.zeros((d,), dtype) - 6.0,    # decay bias: slow decay init
+        "wA": jax.random.normal(next(ks), (d, s.decay_lora), dtype) * sc,
+        "wB": jnp.zeros((s.decay_lora, d), dtype),
+        "u": jax.random.normal(next(ks), (d,), dtype) * 0.1,
+        "Wr": jax.random.normal(next(ks), (d, d), dtype) * sc,
+        "Wk": jax.random.normal(next(ks), (d, d), dtype) * sc,
+        "Wv": jax.random.normal(next(ks), (d, d), dtype) * sc,
+        "Wg": jax.random.normal(next(ks), (d, d), dtype) * sc,
+        "Wo": jax.random.normal(next(ks), (d, d), dtype) * (sc / math.sqrt(2 * cfg.n_layers)),
+        "ln_x": jnp.ones((d,), dtype),
+        # channel mix
+        "maa_k": jnp.zeros((d,), dtype),
+        "maa_r": jnp.zeros((d,), dtype),
+        "Wk_cm": jax.random.normal(next(ks), (d, cfg.d_ff), dtype) * sc,
+        "Wv_cm": jax.random.normal(next(ks), (cfg.d_ff, d), dtype) * (1.0 / math.sqrt(cfg.d_ff)),
+        "Wr_cm": jax.random.normal(next(ks), (d, d), dtype) * sc,
+    }
+    for n in _MIX_NAMES:
+        p["tm"][n] = {
+            "maa": jnp.zeros((d,), dtype),
+            "A": jax.random.normal(next(ks), (d, s.mix_lora), dtype) * sc,
+            "B": jnp.zeros((s.mix_lora, d), dtype),
+        }
+    return p
+
+
+def _ddlerp(p, x, sx, xxx):
+    """data-dependent lerp: x + (sx-x)*(maa + tanh(xxx@A)@B)"""
+    mix = p["maa"] + jnp.einsum("bsl,ld->bsd", jnp.tanh(
+        jnp.einsum("bsd,dl->bsl", xxx, p["A"])), p["B"])
+    return x + (sx - x) * mix
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """WKV6 recurrence. r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd).
+
+    y_t = r_t · (S_{t-1} + diag(u)·(k_t ⊗ v_t));  S_t = diag(w_t)·S_{t-1} + k_t ⊗ v_t
+    """
+    def step(S, t):
+        r_t, k_t, v_t, w_t = t                 # (B,H,hd)
+        a = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * a)
+        S = w_t[..., :, None] * S + a
+        return S, y
+
+    sT, ys = jax.lax.scan(step, state0, tuple(
+        a.transpose(1, 0, 2, 3) for a in (r, k, v, w)))
+    return ys.transpose(1, 0, 2, 3), sT        # (B,S,H,hd), (B,H,hd,hd)
+
+
+def apply_rwkv(cfg: ModelConfig, params: dict, x_res: jax.Array, *,
+               cache: Optional[dict] = None, tp_axis: Optional[str] = None,
+               ln1=None, ln2=None, **_):
+    """Full RWKV6 layer: ln1 + time mix + residual, ln2 + channel mix + residual.
+
+    Unlike attention/mlp blocks, the rwkv layer owns its residual structure
+    (two sub-blocks); the transformer wrapper passes ln params and adds no
+    extra residual.
+    """
+    from repro.models.layers import rms_norm
+    B, S, _ = x_res.shape
+    hd = cfg.ssm.head_size
+    x = rms_norm(ln1, x_res, cfg.rms_eps)
+    # ---- time mix ----------------------------------------------------------
+    if cache is not None:
+        prev = cache["sx_tm"][:, None, :]      # (B,1,d)
+    else:
+        prev = jnp.zeros((B, 1, x.shape[-1]), x.dtype)
+    sx = jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+    sx_tm_last = x[:, -1, :]
+    xxx = x + (sx - x) * params["maa_x"]
+    xw = _ddlerp(params["tm"]["w"], x, sx, xxx)
+    xk = _ddlerp(params["tm"]["k"], x, sx, xxx)
+    xv = _ddlerp(params["tm"]["v"], x, sx, xxx)
+    xr = _ddlerp(params["tm"]["r"], x, sx, xxx)
+    xg = _ddlerp(params["tm"]["g"], x, sx, xxx)
+
+    dh = params["Wr"].shape[1]                 # local width under TP
+    H = dh // hd
+    r = jnp.einsum("bsd,de->bse", xr, params["Wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, params["Wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, params["Wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, params["Wg"]))
+    w = jnp.exp(-jnp.exp(
+        (params["w0"] + jnp.einsum("bsl,ld->bsd", jnp.tanh(
+            jnp.einsum("bsd,dl->bsl", xw, params["wA"])), params["wB"])
+         ).astype(f32))).reshape(B, S, H, hd)
+    u = params["u"].reshape(H, hd).astype(f32)
+
+    st0 = cache["wkv"].astype(f32) if cache is not None else jnp.zeros((B, H, hd, hd), f32)
+    y, sT = _wkv_scan(r.astype(f32), k.astype(f32), v.astype(f32), w, u, st0)
+    y = y.reshape(B, S, dh).astype(x.dtype)
+    # group norm over heads
+    yf = y.reshape(B, S, H, hd).astype(f32)
+    yf = (yf - yf.mean(-1, keepdims=True)) * jax.lax.rsqrt(yf.var(-1, keepdims=True) + 1e-5)
+    y = (yf.reshape(B, S, dh) * params["ln_x"].astype(f32)).astype(x.dtype)
+    y = y * g
+    tm_out = _maybe_psum(jnp.einsum("bsd,de->bse", y, params["Wo"]), tp_axis)
+    x_res = x_res + tm_out
+
+    # ---- channel mix -------------------------------------------------------
+    x = rms_norm(ln2, x_res, cfg.rms_eps)
+    if cache is not None:
+        prev = cache["sx_cm"][:, None, :]
+    else:
+        prev = jnp.zeros((B, 1, x.shape[-1]), x.dtype)
+    sx2 = jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+    sx_cm_last = x[:, -1, :]
+    xk2 = x + (sx2 - x) * params["maa_k"]
+    xr2 = x + (sx2 - x) * params["maa_r"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk2, params["Wk_cm"])))
+    kv = _maybe_psum(jnp.einsum("bsf,fd->bsd", kk, params["Wv_cm"]), tp_axis)
+    cm_out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr2, params["Wr_cm"])) * kv
+    out = x_res + cm_out
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"sx_tm": sx_tm_last, "sx_cm": sx_cm_last,
+                     "wkv": sT.astype(x.dtype)}
+    return out, new_cache, jnp.zeros((), f32)

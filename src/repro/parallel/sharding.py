@@ -1,0 +1,216 @@
+"""Sharding rules: map stacked-param pytree paths to PartitionSpecs.
+
+Refined mesh axes (always 5; sizes may be 1):
+    ("pod", "data", "stage", "tensor", "replica")
+- pod/data/replica: batch (data parallel / serving replicas)
+- stage:  pipeline stage axis (params stacked with leading (S, pps))
+- tensor: tensor parallelism inside a stage
+
+Vocab-parallel axes for embed / lm_head: ("stage", "tensor").
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, PipelinePlan
+
+DP_AXES = ("pod", "data", "replica")     # batch axes
+VP_AXES = ("stage", "tensor")            # vocab-parallel axes
+
+
+def refine_mesh(base_mesh: Mesh, plan: PipelinePlan) -> Mesh:
+    """Reshape the production mesh's model axis into (stage, tensor, replica)."""
+    devs = np.asarray(base_mesh.devices)
+    if devs.ndim == 2:                    # (data, model) single pod
+        data, model = devs.shape
+        devs = devs.reshape(1, data, plan.stages, plan.tensor, plan.replica)
+    elif devs.ndim == 3:                  # (pod, data, model)
+        pod, data, model = devs.shape
+        devs = devs.reshape(pod, data, plan.stages, plan.tensor, plan.replica)
+    else:
+        raise ValueError(f"unexpected mesh rank {devs.ndim}")
+    return Mesh(devs, ("pod", "data", "stage", "tensor", "replica"))
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf tensor-parallel dimension rules (on UNSTACKED leaf shapes)
+# ---------------------------------------------------------------------------
+
+# name -> dim index (negative, from the right) to shard over "tensor"
+_TENSOR_RULES_BY_NAME = {
+    # attention
+    "wq": -2, "wk": -2, "wv": -2, "bq": -2, "bk": -2, "bv": -2, "wo": -3,
+    # mla
+    "wq_up": -2, "wk_up": -2, "wv_up": -2,
+    # mamba
+    "w_x": -1, "w_z": -1, "conv_w": -1, "conv_b": -1, "x_proj": -2,
+    "dt_proj": -1, "dt_bias": -1, "A_log": -2, "D": -1, "out_proj": -2,
+    # rwkv
+    "Wr": -1, "Wk": -1, "Wv": -1, "Wg": -1, "Wo": -2, "w0": -1, "u": -1,
+    "ln_x": -1, "wB": -1, "Wk_cm": -1, "Wv_cm": -2,
+}
+
+# replicated despite looking shardable
+_REPLICATED_NAMES = {
+    "router", "scale", "gate", "wq_down", "wkv_down", "q_norm", "kv_norm",
+    "wA", "maa_x", "maa_k", "maa_r", "maa", "A", "B", "Wr_cm", "pos_embed",
+}
+
+# MLP names whose rule depends on context (dense 2D vs MoE 3D expert-stacked)
+_MLP_NAMES = {"w_gate", "w_up", "w_down", "w1", "w2"}
+
+
+def _attn_heads_shardable(cfg: ModelConfig, T: int) -> bool:
+    """Sharding q/o heads is only consistent if the kv heads either shard
+    the same way or the LOCAL q heads still cover whole kv groups
+    (H/T must be a multiple of the replicated Kh)."""
+    H, Kh = cfg.n_heads, cfg.n_kv_heads
+    if H % T:
+        return False
+    if Kh % T == 0:
+        return True
+    return (H // T) % Kh == 0
+
+
+def tensor_dim(cfg: ModelConfig, path_names: tuple[str, ...],
+               shape: tuple[int, ...], T: int = 1) -> Optional[int]:
+    """Which (negative) dim of the unstacked leaf shards over "tensor"."""
+    name = path_names[-1]
+    if name in _REPLICATED_NAMES:
+        return None
+    if name in _MLP_NAMES:
+        if len(shape) == 3:               # MoE expert-stacked: expert parallel
+            return -3
+        if name in ("w_down", "w2"):      # dense down-proj: ff dim is first
+            return -2
+        return -1                         # dense up/gate: ff dim is last
+    if name in ("wq", "bq", "wo") and T > 1 \
+            and not _attn_heads_shardable(cfg, T):
+        # q/o heads replicate too (GQA consistency; overcount fixed by the
+        # divide-by-T normalization in layers.apply_attention)
+        return None
+    if name in ("wk", "wv", "bk", "bv"):
+        # GQA: kv heads replicate when fewer kv heads than tensor shards
+        return _TENSOR_RULES_BY_NAME[name]
+    return _TENSOR_RULES_BY_NAME.get(name)
+
+
+def _leaf_spec(cfg: ModelConfig, plan: PipelinePlan,
+               path_names: tuple[str, ...], shape: tuple[int, ...],
+               stacked: bool) -> P:
+    name = path_names[-1]
+    lead = 2 if stacked else 0            # (S, pps) stacking dims
+    base_shape = shape[lead:]
+    dims: list = [None] * len(shape)
+    if stacked:
+        dims[0] = "stage"
+    td = tensor_dim(cfg, path_names, base_shape, plan.tensor)
+    if td is not None and plan.tensor > 1:
+        idx = len(shape) + td             # negative -> absolute (incl. lead)
+        size = shape[idx]
+        if size % plan.tensor == 0:       # else replicate (e.g. kv heads < T)
+            dims[idx] = "tensor"
+    return P(*dims)
+
+
+def stacked_param_specs(cfg: ModelConfig, plan: PipelinePlan, stacked_tree):
+    """PartitionSpec pytree for the stacked param tree from pipeline.py."""
+    def spec_for(path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if names[0] == "embed":
+            return P(VP_AXES, None)
+        if names[0] == "lm_head":
+            return P(None, VP_AXES)
+        if names[0] == "pos_embed":
+            return P(None, None)
+        if names[0] in ("final_norm",):
+            return P(*([None] * leaf.ndim))
+        stacked = names[0] == "stages"
+        enc = names[0] == "encoder"
+        if enc and "blocks" in names:
+            # encoder stacked with single leading (n_enc,) dim, stage-replicated
+            dims = [None] * leaf.ndim
+            td = tensor_dim(cfg, names, leaf.shape[1:], plan.tensor)
+            if td is not None and plan.tensor > 1:
+                idx = leaf.ndim + td
+                if leaf.shape[idx] % plan.tensor == 0:
+                    dims[idx] = "tensor"
+            return P(*dims)
+        if enc:
+            return P(*([None] * leaf.ndim))
+        return _leaf_spec(cfg, plan, names, leaf.shape, stacked)
+
+    return jax.tree_util.tree_map_with_path(spec_for, stacked_tree)
+
+
+def batch_spec(decode_sp: bool = False) -> P:
+    return P(DP_AXES)
+
+
+# ---------------------------------------------------------------------------
+# FSDP (ZeRO-3) over the data axis
+# ---------------------------------------------------------------------------
+
+def fsdp_dim(shape: tuple[int, ...], spec: P, data_size: int = 16,
+             min_dim: int = 0) -> Optional[int]:
+    """Pick the dim to additionally shard over "data": the largest dim that
+    is divisible and not already sharded.  None -> leaf stays replicated
+    (tiny leaves: norms, biases, scalars)."""
+    best, best_size = None, 0
+    for i, n in enumerate(shape):
+        if i < min_dim:
+            continue
+        if i < len(spec) and spec[i] is not None:
+            continue
+        if n % data_size == 0 and n > best_size and n >= data_size:
+            best, best_size = i, n
+    return best
+
+
+def apply_fsdp(specs_tree, struct_tree, data_size: int = 16, min_dim: int = 0):
+    """Add "data" to each leaf's spec at its fsdp_dim.  Returns
+    (new_specs, gather_dims) — gather_dims has the chosen dim or -1."""
+    def one(spec, leaf):
+        d = fsdp_dim(leaf.shape, spec, data_size, min_dim)
+        if d is None:
+            return spec, -1                 # -1 sentinel: leaf not fsdp-sharded
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        entries[d] = "data"
+        return P(*entries), d
+
+    flat_specs, treedef = jax.tree_util.tree_flatten(
+        specs_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_leaves = jax.tree_util.tree_leaves(struct_tree)
+    pairs = [one(s, l) for s, l in zip(flat_specs, flat_leaves)]
+    new_specs = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+    dims = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+    return new_specs, dims
+
+
+def fsdp_gather(tree, dims_tree, gather_dtype=None):
+    """All-gather fsdp-sharded leaves back to full size (inside shard_map).
+
+    gather_dtype (e.g. jnp.float8_e4m3fn): cast before the gather and back
+    after — halves FSDP wire traffic vs bf16 (beyond-paper optimization;
+    weight-only fp8 is the deployed norm for inference and increasingly for
+    the forward pass in training)."""
+    import jax.numpy as jnp
+
+    def one(leaf, d):
+        if d < 0:
+            return leaf
+        if gather_dtype is not None and leaf.dtype == jnp.bfloat16:
+            g = jax.lax.all_gather(leaf.astype(gather_dtype), "data",
+                                   axis=d, tiled=True)
+            return g.astype(leaf.dtype)
+        return jax.lax.all_gather(leaf, "data", axis=d, tiled=True)
+    return jax.tree.map(one, tree, dims_tree)
+
+
+def shardings(mesh: Mesh, tree_of_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,243 @@
+"""FlexPipe serving engine — the REAL JAX data plane.
+
+Disaggregated per-stage execution (DESIGN.md §3): each pipeline stage is a
+jitted program over its contiguous layer range; the engine moves activations
+between stages and performs *live inflight refactoring*: re-grouping stage
+boundaries (and every in-flight request's KV cache) between generation steps
+without dropping a request.  Tokens decoded across a refactoring event are
+bit-identical to an uninterrupted run (tested in tests/test_engine.py).
+
+Continuous batching: fixed slot array; per-slot cache length (ragged decode
+through the position-vector path in models/layers.py).
+
+On this CPU container all stages share one device; on real hardware each
+StageExecutor pins to its own ICI slice (device_put on the stage's devices).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.kvcache import init_cache, cache_bytes, group_by_stage, regroup
+from repro.models.model import embed_tokens, lm_head
+from repro.models.transformer import BlockCtx, apply_block
+from repro.serving.metrics import ServingStats
+from repro.serving.workload import Request
+
+
+@dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_seq: int = 256
+    cache_dtype: str = "float32"
+    eos_token: int = -1              # -1: run to max_new_tokens
+    control_interval: float = 1.0    # controller cadence (sim-time seconds)
+
+
+class StageExecutor:
+    """One pipeline stage: layers [lo, hi) with jitted prefill/decode."""
+
+    def __init__(self, cfg: ModelConfig, params_blocks: list, lo: int, hi: int):
+        self.cfg, self.lo, self.hi = cfg, lo, hi
+        self.blocks = params_blocks[lo:hi]
+
+        def _prefill(blocks, x, caches, memory):
+            new = []
+            for i, bp in enumerate(blocks):
+                li = lo + i
+                ctx = BlockCtx(pos0=0, cache=caches[i], memory=memory,
+                               is_global=cfg.is_global_layer(li))
+                x, nc, _ = apply_block(cfg, cfg.layer_kind(li), bp, x, ctx)
+                new.append(nc)
+            return x, new
+
+        def _decode(blocks, x, caches, pos_vec, memory):
+            new = []
+            for i, bp in enumerate(blocks):
+                li = lo + i
+                ctx = BlockCtx(pos0=pos_vec, cache=caches[i], memory=memory,
+                               is_global=cfg.is_global_layer(li))
+                x, nc, _ = apply_block(cfg, cfg.layer_kind(li), bp, x, ctx)
+                new.append(nc)
+            return x, new
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def prefill(self, x, caches, memory=None):
+        return self._prefill(self.blocks, x, caches, memory)
+
+    def decode(self, x, caches, pos_vec, memory=None):
+        return self._decode(self.blocks, x, caches, pos_vec, memory)
+
+
+@dataclass
+class Slot:
+    request: Optional[Request] = None
+    pos: int = 0                     # valid cache length
+    generated: list = field(default_factory=list)
+    done: bool = True
+
+
+class FlexPipeEngine:
+    def __init__(self, cfg: ModelConfig, params: dict,
+                 boundaries: list[int], ecfg: EngineConfig = EngineConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.boundaries = list(boundaries)
+        self.stats = ServingStats()
+        self.refactor_events: list[dict] = []
+        dt = jnp.float32 if ecfg.cache_dtype == "float32" else jnp.bfloat16
+        # slot caches: per-layer list, batch dim = max_batch
+        self.caches = init_cache(cfg, ecfg.max_batch, ecfg.max_seq, dt)
+        self.slots = [Slot() for _ in range(ecfg.max_batch)]
+        self.queue: list[Request] = []
+        self._build_stages()
+
+    # ------------------------------------------------------------------
+    def _build_stages(self) -> None:
+        bs = self.boundaries
+        ends = bs[1:] + [self.cfg.n_layers]
+        self.stages = [StageExecutor(self.cfg, self.params["blocks"], lo, hi)
+                       for lo, hi in zip(bs, ends)]
+        self.stage_caches = group_by_stage(self.caches, bs)
+
+    def refactor(self, new_boundaries: list[int]) -> dict:
+        """Inflight refactoring: regroup stage boundaries + caches (Eq. 10).
+
+        In-flight requests keep their slots and positions; only the layer->
+        stage ownership (and on real hardware, device placement) changes."""
+        t0 = time.perf_counter()
+        old = list(self.boundaries)
+        self.stage_caches = regroup(self.stage_caches, new_boundaries)
+        self.caches = [c for st in self.stage_caches for c in st]
+        self.boundaries = list(new_boundaries)
+        self._build_stages()
+        ev = {"t": time.perf_counter() - t0, "from": old,
+              "to": list(new_boundaries),
+              "inflight": sum(1 for s in self.slots if not s.done)}
+        self.refactor_events.append(ev)
+        return ev
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self, now: float) -> None:
+        for slot_id, slot in enumerate(self.slots):
+            if not slot.done or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            req.start = now
+            self._prefill_into_slot(slot_id, req)
+
+    def _prefill_into_slot(self, slot_id: int, req: Request) -> None:
+        cfg = self.cfg
+        prompt = np.asarray(req.prompt_tokens) if hasattr(req, "prompt_tokens") \
+            else np.arange(req.prompt_len) % cfg.vocab_size
+        prompt = prompt[: self.ecfg.max_seq - req.max_new_tokens - 1]
+        tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+        x = embed_tokens(cfg, self.params, tokens)
+        # batch-1 caches for the prefill, then scatter into the slot
+        dt = self.caches[0]["mixer"]["k"].dtype if "mixer" in self.caches[0] \
+            and "k" in self.caches[0].get("mixer", {}) else jnp.float32
+        tmp = init_cache(cfg, 1, self.ecfg.max_seq, dt)
+        tmp_stages = group_by_stage(tmp, self.boundaries)
+        memory = getattr(req, "memory", None)
+        for st, tc in zip(self.stages, tmp_stages):
+            x, new = st.prefill(x, tc, memory)
+            tc[:] = new
+        logits = lm_head(cfg, self.params, x[:, -1:, :])[0, -1]
+        flat_tmp = [c for stc in tmp_stages for c in stc]
+        self._write_slot_cache(slot_id, flat_tmp)
+        slot = self.slots[slot_id]
+        slot.request = req
+        slot.pos = tokens.shape[1]
+        slot.generated = [int(jnp.argmax(logits))]
+        slot.done = False
+
+    def _write_slot_cache(self, slot_id: int, batch1_caches: list) -> None:
+        def write(dst, src):
+            return dst.at[slot_id:slot_id + 1].set(src.astype(dst.dtype))
+        self.caches = jax.tree.map(write, self.caches, batch1_caches)
+        self.stage_caches = group_by_stage(self.caches, self.boundaries)
+
+    # ------------------------------------------------------------------
+    def decode_step(self, now: float) -> int:
+        """One decode tick for all active slots; returns #active."""
+        active = [i for i, s in enumerate(self.slots) if not s.done]
+        if not active:
+            return 0
+        cfg = self.cfg
+        B = self.ecfg.max_batch
+        tok = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        for i in active:
+            tok[i, 0] = self.slots[i].generated[-1]
+            pos[i] = self.slots[i].pos
+        x = embed_tokens(cfg, self.params, jnp.asarray(tok),
+                         pos0=jnp.asarray(pos))
+        pos_v = jnp.asarray(pos)
+        for si, st in enumerate(self.stages):
+            x, new = st.decode(x, self.stage_caches[si], pos_v)
+            self.stage_caches[si] = new
+        self.caches = [c for stc in self.stage_caches for c in stc]
+        logits = lm_head(cfg, self.params, x)[:, -1, :]
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active:
+            s = self.slots[i]
+            s.generated.append(int(nxt[i]))
+            s.pos += 1
+            req = s.request
+            hit_eos = (self.ecfg.eos_token >= 0
+                       and int(nxt[i]) == self.ecfg.eos_token)
+            if len(s.generated) >= req.max_new_tokens or hit_eos:
+                req.finish = now
+                self.stats.record(now, req.latency, req.met_slo,
+                                  queue_s=max(req.start - req.arrival, 0.0))
+                s.done = True
+                s.request = None
+        return len(active)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request], controller=None,
+            time_per_tick: float = 0.05) -> ServingStats:
+        """Trace-driven loop in simulated time; controller may refactor."""
+        pending = sorted(requests, key=lambda r: r.arrival)
+        now = 0.0
+        last_ctl = 0.0
+        i = 0
+        while i < len(pending) or self.queue or \
+                any(not s.done for s in self.slots):
+            while i < len(pending) and pending[i].arrival <= now:
+                self.submit(pending[i])
+                if controller is not None:
+                    controller.on_request(pending[i].arrival)
+                i += 1
+            self._admit(now)
+            n = self.decode_step(now)
+            if controller is not None and now - last_ctl >= self.ecfg.control_interval:
+                last_ctl = now
+                d, _ = controller.control_step(now, len(self.queue))
+                if d.changed and d.target.stages <= self.cfg.n_layers:
+                    nb = self._boundaries_for(d.target.stages)
+                    if nb != self.boundaries:
+                        self.refactor(nb)
+            self.stats.queue_samples.append((now, len(self.queue)))
+            now += time_per_tick
+        return self.stats
+
+    def _boundaries_for(self, n_stages: int) -> list[int]:
+        L_ = self.cfg.n_layers
+        n = min(n_stages, L_)
+        per = L_ // n
+        return [k * per for k in range(n)]

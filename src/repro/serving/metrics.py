@@ -1,0 +1,99 @@
+"""Serving metrics: latency percentiles, goodput, pipeline-stall detection
+and recovery timing exactly as the paper defines them (§9.3):
+
+  stall:    response latency exceeds 1.5× baseline (P25 of normal operation)
+  recovery: latency returns within 1.2× baseline
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def percentiles(xs: list[float], qs=(50, 90, 95, 99)) -> dict:
+    if not xs:
+        return {f"p{q}": math.nan for q in qs}
+    a = np.asarray(xs)
+    return {f"p{q}": float(np.percentile(a, q)) for q in qs}
+
+
+@dataclass
+class ServingStats:
+    latencies: list = field(default_factory=list)      # (finish_t, latency)
+    completed: int = 0
+    slo_met: int = 0
+    queue_samples: list = field(default_factory=list)  # (t, qlen)
+    util_samples: list = field(default_factory=list)   # (t, busy_frac)
+    breakdown: dict = field(default_factory=lambda: {
+        "queue": 0.0, "compute": 0.0, "comm": 0.0, "load": 0.0})
+
+    def record(self, finish_t: float, latency: float, met_slo: bool,
+               queue_s: float = 0.0, compute_s: float = 0.0,
+               comm_s: float = 0.0, load_s: float = 0.0) -> None:
+        self.latencies.append((finish_t, latency))
+        self.completed += 1
+        self.slo_met += int(met_slo)
+        self.breakdown["queue"] += queue_s
+        self.breakdown["compute"] += compute_s
+        self.breakdown["comm"] += comm_s
+        self.breakdown["load"] += load_s
+
+    # -- summaries ---------------------------------------------------------
+    def latency_percentiles(self) -> dict:
+        return percentiles([l for _, l in self.latencies])
+
+    def goodput(self, horizon: float) -> float:
+        """SLO-satisfying completions per second."""
+        return self.slo_met / max(horizon, 1e-9)
+
+    def mean_breakdown(self) -> dict:
+        n = max(self.completed, 1)
+        return {k: v / n for k, v in self.breakdown.items()}
+
+    def mean_utilization(self) -> float:
+        if not self.util_samples:
+            return 0.0
+        return float(np.mean([u for _, u in self.util_samples]))
+
+    # -- stall analysis (§9.3) ----------------------------------------------
+    def stall_episodes(self, *, warmup_frac: float = 0.2,
+                       window: float = 1.0, start_after: float = 60.0) -> list[dict]:
+        """Detect stalls (latency > 1.5×P25) and recovery (≤ 1.2×P25).
+
+        Episodes before ``start_after`` are excluded (instance warm-up is a
+        cold-start, not a pipeline stall)."""
+        if len(self.latencies) < 20:
+            return []
+        xs = sorted(self.latencies)
+        n0 = int(len(xs) * warmup_frac)
+        baseline = float(np.percentile([l for _, l in xs[:max(n0, 10)]], 25))
+        hi, lo = 1.5 * baseline, 1.2 * baseline
+        episodes = []
+        cur = None
+        # smooth over fixed windows
+        t_end = xs[-1][0]
+        t = max(xs[0][0], start_after)
+        i = 0
+        while t < t_end:
+            w = [l for ft, l in xs if t <= ft < t + window]
+            if w:
+                m = float(np.median(w))
+                if cur is None and m > hi:
+                    cur = {"start": t, "peak": m}
+                elif cur is not None:
+                    cur["peak"] = max(cur["peak"], m)
+                    if m <= lo:
+                        cur["end"] = t + window
+                        cur["recovery_s"] = cur["end"] - cur["start"]
+                        episodes.append(cur)
+                        cur = None
+            t += window
+        return episodes
+
+    def median_recovery(self, **kw) -> float:
+        eps = self.stall_episodes(**kw)
+        if not eps:
+            return 0.0
+        return float(np.median([e["recovery_s"] for e in eps]))

@@ -1,0 +1,91 @@
+"""AdamW with f32 moments, global-norm clipping, cosine schedule.
+
+No optax in this environment — implemented directly.  The optimizer state is
+a pytree congruent with params (sharded identically), so it drops into the
+pipeline's shard_map without extra plumbing.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    m: Any                   # f32 pytree like params
+    v: Any                   # f32 pytree like params
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(f32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState,
+                 extra_norm_sq: jax.Array | None = None):
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    ``extra_norm_sq``: for sharded params the true global grad norm needs the
+    cross-shard sum of squares — pass it pre-psum'd; local norm used if None.
+    """
+    step = state.step + 1
+    if extra_norm_sq is None:
+        gnorm = global_norm(grads)
+    else:
+        gnorm = jnp.sqrt(extra_norm_sq)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(f32)
+    b2c = 1 - cfg.b2 ** step.astype(f32)
+
+    def upd(p, g, m, v):
+        g = g.astype(f32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(f32)
+        return (p.astype(f32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

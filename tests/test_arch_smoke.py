@@ -1,0 +1,85 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train step on CPU, output shapes + no NaNs.  (Deliverable f.)"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_arch, list_archs
+from repro.models.model import forward, loss_fn, prefill, decode_step
+from repro.models.transformer import init_model
+
+ARCHS = list_archs()
+
+
+def _smoke_batch(cfg, key, B=2, S=16):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.d_model))
+    elif cfg.n_memory_tokens:
+        batch["memory"] = jax.random.normal(key, (B, cfg.n_memory_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_finite(arch):
+    spec = get_arch(arch)
+    cfg = spec.smoke_config
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    batch = _smoke_batch(cfg, key)
+    logits, _, aux = forward(cfg, params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN/inf in logits"
+    assert bool(jnp.isfinite(aux)), f"{arch}: NaN aux loss"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    spec = get_arch(arch)
+    cfg = spec.smoke_config
+    key = jax.random.PRNGKey(1)
+    params = init_model(key, cfg)
+    batch = _smoke_batch(cfg, key)
+
+    def loss(p):
+        l, _ = loss_fn(cfg, p, batch)
+        return l
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert bool(jnp.isfinite(val)), f"{arch}: NaN loss"
+    gn = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+    assert bool(jnp.isfinite(gn)), f"{arch}: NaN grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_matches_forward(arch):
+    spec = get_arch(arch)
+    cfg = spec.smoke_config
+    key = jax.random.PRNGKey(2)
+    params = init_model(key, cfg)
+    batch = _smoke_batch(cfg, key)
+    tokens = batch["tokens"]
+    logits, _, _ = forward(cfg, params, batch)
+
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = tokens[:, :-1]
+    _, cache = prefill(cfg, params, pre_batch, max_seq=32,
+                       cache_dtype=jnp.float32)
+    step_logits, _ = decode_step(cfg, params, tokens[:, -1:], cache, 15,
+                                 memory=batch.get("memory"))
+    ref = logits[:, -1, :]
+    rel = float(jnp.abs(step_logits - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 1e-4, f"{arch}: decode/forward mismatch rel={rel}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_registered(arch):
+    spec = get_arch(arch)
+    cfg = spec.config
+    # pattern tiling and plan constraints hold for every non-skipped shape
+    assert cfg.n_layers % cfg.pattern_size == 0
+    for shape_name, plan in spec.default_plans.items():
+        if shape_name in spec.skip_shapes:
+            continue
+        plan.validate(cfg, model_axis=16)

@@ -1,0 +1,198 @@
+"""FlexPipe control-plane tests: partitioner (Eq. 2), CV monitor,
+granularity selection (Eq. 4-5), allocation (Eq. 6-9), scaling (Eq. 11-12),
+HRG, affinity (Eq. 13) — unit + hypothesis property tests."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_arch
+from repro.core.affinity import AffinityScheduler, HostParamCache
+from repro.core.allocation import GPU, StageReq, allocate, multiplexing_penalty
+from repro.core.cv_monitor import CVMonitor, gamma_interarrivals
+from repro.core.granularity import (GranularityProfile, instances,
+                                    optimal_stage_count, select)
+from repro.core.graph import batch_aware_activation, build_graph, fit_alpha
+from repro.core.hrg import HierarchicalResourceGraph
+from repro.core.partitioner import candidate_partitions, partition
+from repro.core.scaling import scaling_granularity, slo_feasible
+
+
+CFG = get_arch("qwen1.5-0.5b").config
+NODES = build_graph(CFG)
+
+
+class TestPartitioner:
+    def test_partition_covers_all_ops(self):
+        for k in (2, 4, 8):
+            p = partition(NODES, k)
+            assert p.n_stages == k
+            assert p.boundaries[0] == 0
+            assert list(p.boundaries) == sorted(set(p.boundaries))
+
+    def test_balanced_stages(self):
+        p = partition(NODES, 4)
+        cs = p.stage_compute
+        assert max(cs) / max(min(cs), 1e-12) < 1.5, "stages must be balanced"
+
+    def test_memory_cap_respected(self):
+        cap = sum(n.s_p for n in NODES) / 3
+        p = partition(NODES, 8, mem_cap=cap)
+        assert max(p.stage_params) <= cap
+
+    def test_infeasible_cap_raises(self):
+        with pytest.raises(ValueError):
+            partition(NODES, 2, mem_cap=1.0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(k=st.sampled_from([2, 3, 4, 6, 8, 12]))
+    def test_more_stages_smaller_max(self, k):
+        """Property (Eq. 2 + monotonicity): finer partitions shrink the
+        largest per-stage parameter size."""
+        p1 = partition(NODES, k)
+        p2 = partition(NODES, k * 2)
+        assert max(p2.stage_params) <= max(p1.stage_params) * 1.01
+
+    def test_pattern_boundary_preference(self):
+        """R(S_k): with a strong regularizer every cut lands on a layer
+        (pattern) boundary."""
+        p = partition(NODES, 4, lam=10.0, pattern_penalty=5.0)
+        for b in p.boundaries:
+            assert NODES[b].pattern_boundary
+
+    def test_batch_aware_scaling_fit(self):
+        base = 1e6
+        samples = [(b, batch_aware_activation(base, b, 8, alpha=0.3))
+                   for b in (8, 16, 32, 64)]
+        assert abs(fit_alpha(samples, 8, base) - 0.3) < 1e-6
+
+
+class TestCVMonitor:
+    @settings(max_examples=8, deadline=None)
+    @given(cv=st.sampled_from([0.3, 1.0, 2.0, 4.0]))
+    def test_recovers_target_cv(self, cv):
+        """Property: the estimator recovers the generator's CV (±35%)."""
+        rng = np.random.default_rng(42)
+        m = CVMonitor()
+        t = 0.0
+        for iv in gamma_interarrivals(rng, rate=50.0, cv=cv, n=4000):
+            t += iv
+            m.record(t)
+        est = m.estimate(t, window=t)
+        assert abs(est.cv - cv) / cv < 0.35
+
+    def test_velocity_sign(self):
+        m = CVMonitor()
+        t = 0.0
+        for _ in range(100):          # slow phase
+            t += 1.0
+            m.record(t)
+        for _ in range(200):          # fast phase
+            t += 0.05
+            m.record(t)
+        assert m.velocity(t) > 0
+
+
+class TestGranularity:
+    PROFILES = [
+        GranularityProfile(2, 64, 80, 0.3, 0.3),
+        GranularityProfile(8, 256, 100, 0.6, 2.0),
+        GranularityProfile(32, 1024, 120, 1.2, 5.0),
+    ]
+
+    def test_low_cv_picks_coarse(self):
+        assert select(self.PROFILES, 0.2).stages == 2
+
+    def test_high_cv_picks_fine(self):
+        assert select(self.PROFILES, 6.0).stages == 32
+
+    def test_instances_eq5(self):
+        p = self.PROFILES[1]
+        n = instances(p, total_capacity=1000.0, beta1=1.0, beta2=0.05)
+        assert n == int(1000.0 / (100 / (1.0 + 0.05 * 8)))
+
+    def test_optimal_stage_sqrt_law(self):
+        assert optimal_stage_count(1.0) <= 4
+        assert optimal_stage_count(9.0) >= 8
+        assert optimal_stage_count(16.0) >= optimal_stage_count(9.0)
+
+
+class TestAllocation:
+    def _gpus(self, n=8, mem=80e9):
+        return [GPU(gpu_id=i, server=i // 2, mem_capacity=mem)
+                for i in range(n)]
+
+    def test_same_model_never_colocated(self):
+        stages = [StageReq("m0", i, 10e9, 100.0, 1.0) for i in range(4)]
+        a = allocate(stages, self._gpus())
+        assert len(set(a.placement.values())) == 4
+
+    def test_memory_cap(self):
+        stages = [StageReq("m0", 0, 70e9, 100.0, 1.0),
+                  StageReq("m1", 0, 70e9, 100.0, 1.0)]
+        a = allocate(stages, self._gpus(n=2))
+        gpus = [a.placement[("m0", 0)], a.placement[("m1", 0)]]
+        assert gpus[0] != gpus[1]
+
+    def test_rejects_when_full(self):
+        stages = [StageReq(f"m{i}", 0, 79e9, 100.0, 1.0) for i in range(3)]
+        a = allocate(stages, self._gpus(n=2))
+        assert len(a.rejected) == 1
+
+    def test_penalty_quadratic_in_cv(self):
+        assert multiplexing_penalty(4.0) / multiplexing_penalty(0.0) == 1 + 0.5 * 16
+
+
+class TestScaling:
+    def test_sigmoid_monotone(self):
+        ms = [scaling_granularity(cv, 500.0) for cv in (0.1, 1.0, 4.0, 8.0)]
+        assert ms == sorted(ms)
+        assert ms[-1] > ms[0]
+
+    def test_calm_system_coarse(self):
+        assert scaling_granularity(0.1, 1.0) <= 4
+
+    def test_slo_eq12(self):
+        assert slo_feasible(deadline=2.0, init_time=0.5,
+                            stage_throughputs=[100.0] * 4, queue_len=100,
+                            required=5.0)
+        assert not slo_feasible(deadline=0.4, init_time=0.5,
+                                stage_throughputs=[100.0], queue_len=100,
+                                required=5.0)
+
+
+class TestHRGAffinity:
+    def test_hrg_avoids_contended_path(self):
+        hrg = HierarchicalResourceGraph()
+        hrg.add_rack("r0")
+        hrg.add_server("r0", "a")
+        hrg.add_server("r0", "b")
+        hrg.reserve("a", 30e9)
+        assert hrg.least_contended(["a", "b"], now=0.0) == "b"
+
+    def test_transfer_time_degrades_under_contention(self):
+        hrg = HierarchicalResourceGraph()
+        hrg.add_rack("r0")
+        hrg.add_server("r0", "a")
+        t0 = hrg.transfer_time("a", 10e9, now=0.0)
+        hrg.reserve("a", 30e9)
+        assert hrg.transfer_time("a", 10e9, now=0.0) > t0
+
+    def test_affinity_prefers_recent_host(self):
+        s = AffinityScheduler()
+        s.record_placement("m", "warm", now=100.0)
+        pick = s.select("m", {"warm": 1, "cold": 1}, now=110.0)
+        assert pick == "warm"
+
+    def test_host_cache_warm_vs_cold(self):
+        c = HostParamCache()
+        c.put("s0", "m", 0, 10e9, now=0.0)
+        assert c.load_time("s0", "m", 0, 10e9) < c.load_time("s1", "m", 0, 10e9)
+
+    def test_host_cache_lru_eviction(self):
+        c = HostParamCache(capacity_bytes=25e9)
+        for i in range(4):
+            c.put("s0", "m", i, 10e9, now=float(i))
+        assert not c.has("s0", "m", 0)
+        assert c.has("s0", "m", 3)

@@ -1,0 +1,141 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis property tests,
+all against the pure-jnp oracles in kernels/ref.py (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_wkv import wkv6
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Skv,H,Kh,hd,causal,window", [
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 64, 256, 8, 8, 32, True, 0),
+    (2, 96, 96, 4, 1, 64, True, 32),      # GQA max + sliding window
+    (1, 33, 190, 2, 2, 16, False, 0),     # ragged, non-causal (cross attn)
+    (1, 1, 128, 4, 2, 64, True, 0),       # single query row
+])
+def test_flash_attention_sweep(dtype, B, Sq, Skv, H, Kh, hd, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Kh, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Kh, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=64)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(bq=st.sampled_from([16, 32, 128]), bk=st.sampled_from([16, 64, 128]),
+       sq=st.integers(1, 150), extra=st.integers(0, 100))
+def test_flash_blockshape_invariance(bq, bk, sq, extra):
+    """Property: output independent of VMEM block shape; causal alignment
+    holds for arbitrary query/KV span offsets."""
+    skv = sq + extra
+    q = jax.random.normal(jax.random.PRNGKey(sq), (1, sq, 2, 32))
+    k = jax.random.normal(jax.random.PRNGKey(skv), (1, skv, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(skv + 1), (1, skv, 2, 32))
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    expect = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Kh,hd,Smax", [
+    (2, 4, 2, 64, 300), (1, 8, 8, 32, 512), (4, 4, 1, 128, 64),
+])
+def test_decode_attention_sweep(dtype, B, H, Kh, hd, Smax):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kc = jax.random.normal(ks[1], (B, Kh, Smax, hd), dtype)
+    vc = jax.random.normal(ks[2], (B, Kh, Smax, hd), dtype)
+    cl = jnp.asarray(Smax - 7)
+    out = decode_attention(q, kc, vc, cl, block_k=64)
+    expect = ref.decode_attention_ref(q, kc, vc, cl)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(lens=st.lists(st.integers(1, 99), min_size=2, max_size=4))
+def test_decode_ragged_lengths(lens):
+    """Property: ragged per-request cache lengths == per-request results."""
+    B = len(lens)
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 4, 32))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, 2, 100, 32))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, 2, 100, 32))
+    out = decode_attention(q, kc, vc, jnp.asarray(lens), block_k=32)
+    for i, L in enumerate(lens):
+        one = decode_attention(q[i:i+1], kc[i:i+1], vc[i:i+1],
+                               jnp.asarray(L), block_k=32)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(one[0]),
+                                   atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("B,S,H,hd,bt", [
+    (2, 64, 2, 16, 32), (1, 100, 4, 32, 32), (1, 37, 1, 64, 128),
+])
+def test_wkv6_sweep(dtype, B, S, H, hd, bt):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd), dtype) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, hd), dtype) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, hd), dtype) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, hd), dtype) * 0.1
+    y, stf = wkv6(r, k, v, w.astype(dtype), u, block_t=bt)
+    ye, ste = ref.wkv6_ref(r, k, v, w.astype(dtype), u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(stf), np.asarray(ste),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s1=st.integers(5, 40), s2=st.integers(5, 40))
+def test_wkv6_chunked_composition(s1, s2):
+    """Property: WKV over [s1; s2] == WKV(s1) then WKV(s2) from its state
+    (the invariant inflight state migration relies on)."""
+    B, H, hd = 1, 2, 16
+    S = s1 + s2
+    ks = jax.random.split(jax.random.PRNGKey(s1 * 100 + s2), 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, hd)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    y_full, st_full = ref.wkv6_ref(r, k, v, w, u)
+    y1, st1 = ref.wkv6_ref(r[:, :s1], k[:, :s1], v[:, :s1], w[:, :s1], u)
+    y2, st2 = ref.wkv6_ref(r[:, s1:], k[:, s1:], v[:, s1:], w[:, s1:], u,
+                           state0=st1)
+    np.testing.assert_allclose(np.asarray(y_full[:, s1:]), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_full), np.asarray(st2),
+                               atol=1e-4, rtol=1e-4)
