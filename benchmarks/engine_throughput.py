@@ -1,0 +1,158 @@
+"""Engine hot-path benchmark: decode tokens/s and refactor stall.
+
+Measures the real JAX data plane (no simulator):
+
+* decode throughput, fused single-dispatch tick (embed -> lax.scan stages
+  -> lm_head -> on-device argmax) vs the per-stage unfused loop with
+  host-side argmax — the before/after of the fused hot path;
+* inflight-refactor stall between WARMED granularity profiles (p50/p99 over
+  alternating transitions — the paper's pause-free claim lives here);
+* a COLD refactor to an unwarmed configuration, separating XLA compile
+  from the transition itself via the executor cache's trace counter.
+
+Writes ``BENCH_engine.json`` at the repo root (override with --out).
+
+    PYTHONPATH=src python benchmarks/engine_throughput.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+
+def _build_engine(arch: str, max_batch: int, max_seq: int, fused: bool,
+                  warm: tuple[int, ...], decode_budget: int):
+    from repro.configs.base import get_arch
+    from repro.models.transformer import init_model
+    from repro.serving.engine import (EngineConfig, FlexPipeEngine,
+                                      balanced_boundaries)
+    from repro.serving.workload import Request
+
+    cfg = get_arch(arch).smoke_config
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    eng = FlexPipeEngine(
+        cfg, params, boundaries=balanced_boundaries(cfg.n_layers, 2),
+        ecfg=EngineConfig(max_batch=max_batch, max_seq=max_seq,
+                          fused_decode=fused, warm_profiles=warm))
+    # fill every slot with a request long enough to outlast the measured
+    # window, so every tick decodes a full batch
+    for i in range(max_batch):
+        eng.submit(Request(rid=i, arrival=0.0, prompt_len=12 + i,
+                           max_new_tokens=decode_budget))
+    eng._admit(0.0)
+    return eng
+
+
+def bench_decode(arch: str, fused: bool, ticks: int, max_batch: int,
+                 max_seq: int) -> dict:
+    spin = 3
+    # prompts are <= 20 tokens; keep prompt + spin + timed ticks within the
+    # cache so no slot finishes (or overflows max_seq) inside the window
+    budget = max_seq - 24
+    ticks = min(ticks, budget - spin - 2)
+    eng = _build_engine(arch, max_batch, max_seq, fused, warm=(),
+                        decode_budget=budget)
+    eng.warmup(())                       # compile the current config
+    for t in range(spin):                # spin-up (donation steady state)
+        eng.decode_step(0.0)
+    t0 = time.perf_counter()
+    decoded = 0
+    for t in range(ticks):
+        decoded += eng.decode_step(0.0)
+    dt = time.perf_counter() - t0
+    assert decoded == ticks * max_batch, \
+        f"slots drained mid-window ({decoded} != {ticks * max_batch})"
+    return {"tokens_per_s": decoded / dt, "ticks": ticks,
+            "tick_ms_mean": dt / ticks * 1e3, "batch": max_batch,
+            "decoded": decoded}
+
+
+def bench_refactor(arch: str, n_transitions: int, max_batch: int,
+                   max_seq: int) -> dict:
+    from repro.serving import executor_cache as xc
+    from repro.serving.engine import balanced_boundaries
+
+    eng = _build_engine(arch, max_batch, max_seq, fused=True, warm=(),
+                        decode_budget=max_seq - 24)
+    L = eng.cfg.n_layers
+    cfg_a = balanced_boundaries(L, 2)
+    cfg_b = balanced_boundaries(L, min(4, L))
+    eng.warmup((2, min(4, L)))
+    for t in range(3):
+        eng.decode_step(0.0)
+    warm_ms, hits = [], 0
+    for k in range(n_transitions):
+        ev = eng.refactor(cfg_b if k % 2 == 0 else cfg_a)
+        hits += int(ev["compile_cache_hit"])
+        warm_ms.append(ev["t"] * 1e3)
+        eng.decode_step(0.0)             # keep requests genuinely in flight
+    # one cold transition to a never-seen granularity: pays trace + compile
+    cold_cfg = balanced_boundaries(L, min(3, L))
+    assert tuple(cold_cfg) not in {tuple(cfg_a), tuple(cfg_b)} or L < 3
+    traces0 = xc.trace_count()
+    ev_cold = eng.refactor(cold_cfg)
+    warm = np.asarray(warm_ms)
+    return {
+        "warm_stall_ms": {"p50": float(np.percentile(warm, 50)),
+                          "p99": float(np.percentile(warm, 99)),
+                          "mean": float(warm.mean()), "n": len(warm_ms)},
+        "warm_hit_rate": hits / max(n_transitions, 1),
+        "cold_stall_ms": ev_cold["t"] * 1e3,
+        "cold_compile_cache_hit": ev_cold["compile_cache_hit"],
+        "cold_new_traces": xc.trace_count() - traces0,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--ticks", type=int, default=200)
+    ap.add_argument("--transitions", type=int, default=40)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny tick/transition counts")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.max_seq < 64:
+        ap.error("--max-seq must be >= 64 (prompts + timed decode window "
+                 "must fit in the cache)")
+    if args.quick:
+        args.ticks, args.transitions = 25, 8
+        args.max_batch, args.max_seq = 4, 64
+
+    fused = bench_decode(args.arch, True, args.ticks, args.max_batch,
+                         args.max_seq)
+    unfused = bench_decode(args.arch, False, args.ticks, args.max_batch,
+                           args.max_seq)
+    refac = bench_refactor(args.arch, args.transitions, args.max_batch,
+                           args.max_seq)
+    out = {
+        "bench": "engine_throughput",
+        "arch": args.arch,
+        "quick": args.quick,
+        "decode": {
+            "fused": fused,
+            "unfused": unfused,
+            "fused_speedup": fused["tokens_per_s"] / unfused["tokens_per_s"],
+        },
+        "refactor": refac,
+        "meta": {"backend": jax.default_backend(),
+                 "jax": jax.__version__},
+    }
+    path = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(json.dumps(out, indent=2))
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    main()

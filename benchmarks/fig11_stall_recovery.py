@@ -28,13 +28,19 @@ def run():
                      f"{fp / max(alpa, 1e-9):.2f}",
                      "paper: 9ms vs 16ms (0.56x)"))
     # the paper's 9 ms is the REFACTORING transition itself — measured for
-    # real on the JAX engine (live stage regroup with in-flight requests)
-    rows.append(("fig11.real_engine_refactor_ms", f"{_engine_refactor_ms():.1f}",
-                 "paper=9ms at CV=4"))
+    # real on the JAX engine (live stage regroup with in-flight requests).
+    # refactor() reports compile-cache hit/miss, so stall (warm: executor
+    # cache hit, zero traces) is separated from XLA compile (cold miss).
+    warm_ms, cold_ms = _engine_refactor_ms()
+    rows.append(("fig11.real_engine_refactor_ms", f"{warm_ms:.3f}",
+                 "paper=9ms at CV=4 (warmed executor cache)"))
+    rows.append(("fig11.real_engine_refactor_cold_compile_ms",
+                 f"{cold_ms:.1f}", "first visit to a granularity: XLA "
+                 "compile, off the steady-state path"))
     return rows
 
 
-def _engine_refactor_ms() -> float:
+def _engine_refactor_ms() -> tuple[float, float]:
     import jax
     from repro.configs.base import get_arch
     from repro.models.transformer import init_model
@@ -44,15 +50,18 @@ def _engine_refactor_ms() -> float:
     cfg = get_arch("qwen1.5-0.5b").smoke_config
     params = init_model(jax.random.PRNGKey(0), cfg)
     eng = FlexPipeEngine(cfg, params, [0, 2],
-                         EngineConfig(max_batch=4, max_seq=64))
+                         EngineConfig(max_batch=4, max_seq=64,
+                                      warm_profiles=(2, 4)))
     for i in range(3):
         eng.submit(Request(rid=i, arrival=0.0, prompt_len=12,
                            max_new_tokens=8))
     eng._admit(0.0)
     for t in range(3):
         eng.decode_step(t * 0.1)
-    ev = eng.refactor([0, 1, 2, 3])       # cache regroup + stage rebuild
-    return ev["t"] * 1e3
+    warm = eng.refactor([0, 1, 2, 3])     # warmed: zero-copy regroup + hit
+    assert warm["compile_cache_hit"]
+    cold = eng.refactor([0, 2, 3])        # unwarmed: pays the jit trace
+    return warm["t"] * 1e3, cold["t"] * 1e3
 
 
 if __name__ == "__main__":

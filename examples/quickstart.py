@@ -27,9 +27,12 @@ def main() -> None:
                            cv_opt=2.5),
     ]
     controller = FlexPipeController(cfg, profiles)
-    engine = FlexPipeEngine(cfg, params, boundaries=[0, 2],
-                            ecfg=EngineConfig(max_batch=4, max_seq=96,
-                                              control_interval=0.5))
+    engine = FlexPipeEngine(
+        cfg, params, boundaries=[0, 2],
+        ecfg=EngineConfig(max_batch=4, max_seq=96, control_interval=0.5,
+                          # precompile both granularity profiles so the
+                          # live refactor below is a pure cache hit
+                          warm_profiles=tuple(p.stages for p in profiles)))
 
     rng = np.random.default_rng(0)
     # stable phase then a burst — the controller should refactor 2 -> 4
@@ -48,7 +51,8 @@ def main() -> None:
     print(f"refactor events: {len(engine.refactor_events)}")
     for ev in engine.refactor_events:
         print(f"  stages {len(ev['from'])} -> {len(ev['to'])} "
-              f"({ev['inflight']} in-flight requests, {ev['t']*1e3:.1f} ms)")
+              f"({ev['inflight']} in-flight requests, {ev['t']*1e3:.3f} ms, "
+              f"executor-cache hit={ev['compile_cache_hit']})")
     assert stats.completed == len(reqs), "all requests must complete"
     print("OK")
 

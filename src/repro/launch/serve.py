@@ -41,8 +41,11 @@ def main() -> None:
     controller = FlexPipeController(cfg, profiles)
     eng = FlexPipeEngine(cfg, params,
                          boundaries=[i * 4 for i in range(max(n // 4, 1))],
-                         ecfg=EngineConfig(max_batch=args.max_batch,
-                                           max_seq=96))
+                         ecfg=EngineConfig(
+                             max_batch=args.max_batch, max_seq=96,
+                             # precompile every granularity the controller
+                             # can pick: refactors then never stall on XLA
+                             warm_profiles=tuple(p.stages for p in profiles)))
     rng = np.random.default_rng(0)
     reqs = synth_requests(rng, rate=args.rate, cv=args.cv,
                           duration=args.duration, prompt_mean=24,

@@ -96,13 +96,23 @@ def group_by_stage(per_layer: list, boundaries: list[int]) -> list[list]:
 
     boundaries: stage start indices, e.g. [0, 8, 16, 24] for 4 stages of a
     32-layer model.  Returns list of per-stage sublists.
+
+    Zero-copy: only the Python list is re-sliced — the per-layer cache
+    pytrees (and their device buffers) are shared with the input, so
+    refactoring ownership changes cost no device traffic on a single host.
     """
     ends = boundaries[1:] + [len(per_layer)]
     return [per_layer[b:e] for b, e in zip(boundaries, ends)]
 
 
 def regroup(per_stage: list[list], new_boundaries: list[int]) -> list[list]:
-    """Re-split stage-grouped caches to new boundaries (refactoring move)."""
+    """Re-split stage-grouped caches to new boundaries (refactoring move).
+
+    Zero-copy re-view when per-layer buffers are unchanged: flattening and
+    re-grouping never touches leaves, so the new per-stage lists alias the
+    same device buffers (cross-host transfers, when stages live on separate
+    devices, are the simulator/HRG's cost model — see ``migration_plan``).
+    """
     flat = [c for stage in per_stage for c in stage]
     return group_by_stage(flat, new_boundaries)
 

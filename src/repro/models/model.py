@@ -30,8 +30,10 @@ def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array,
     x = params["embed"][tokens]
     if cfg.rope_theta == 0 and "pos_embed" in params:
         S = tokens.shape[1]
-        pos = pos0 + jnp.arange(S)
-        x = x + params["pos_embed"][pos][None, :, :]
+        p0 = jnp.asarray(pos0)
+        pos = (p0[:, None] if p0.ndim == 1 else p0) + jnp.arange(S)
+        pe = params["pos_embed"][pos]            # (S, d) or (B, S, d) ragged
+        x = x + (pe[None, :, :] if pe.ndim == 2 else pe)
     return x
 
 

@@ -132,6 +132,43 @@ def apply_block(cfg: ModelConfig, kind: LayerKind, params: dict, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Stacked-layer scan support (fused decode hot path)
+# ---------------------------------------------------------------------------
+
+def stack_blocks(blocks: list) -> dict:
+    """Stack per-layer block param trees along a new leading layer dim.
+
+    All blocks must share one pytree structure (same ``LayerKind``); the
+    result is scannable with ``jax.lax.scan`` (maxtext stacked-pytree idiom).
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def scan_runs(cfg: ModelConfig, lo: int, hi: int) -> list[tuple[int, int]]:
+    """Partition layers [lo, hi) into maximal scannable runs.
+
+    A run groups consecutive layers whose block params and caches stack:
+    identical ``LayerKind`` (param/cache pytree structure) and identical
+    global/local attention flavor (cache seq length + masking).  Homogeneous
+    models collapse to one run per stage; hybrid patterns (e.g. jamba,
+    gemma3's 5:1 local:global) fall back to shorter runs, with single-layer
+    runs executed unrolled.
+    """
+    runs: list[tuple[int, int]] = []
+    start = lo
+    prev = None
+    for li in range(lo, hi):
+        sig = (cfg.layer_kind(li), cfg.is_global_layer(li))
+        if prev is not None and sig != prev:
+            runs.append((start, li))
+            start = li
+        prev = sig
+    if hi > lo:
+        runs.append((start, hi))
+    return runs
+
+
+# ---------------------------------------------------------------------------
 # Whole-model params
 # ---------------------------------------------------------------------------
 

@@ -7,17 +7,44 @@ boundaries (and every in-flight request's KV cache) between generation steps
 without dropping a request.  Tokens decoded across a refactoring event are
 bit-identical to an uninterrupted run (tested in tests/test_engine.py).
 
+Hot path
+--------
+The steady-state decode tick is a single XLA dispatch per configuration
+(``ExecutorCache.fused_decode``): embed -> every stage (layer loop as
+``lax.scan`` over stacked per-stage block params) -> lm_head -> on-device
+argmax.  Only the B sampled token ids (int32) cross to host per tick;
+EOS / length bookkeeping is vectorized in numpy.  Prefill admission writes
+the prompt's cache rows directly into the batch slot with
+``jax.lax.dynamic_update_slice`` inside a donated per-stage program — no
+host-side temp-cache scatter.
+
+Donation invariants
+-------------------
+All executor programs donate their cache arguments: after a decode tick or
+a prefill, the cache buffers previously held in ``self.caches`` are consumed
+and must not be touched again — the engine adopts the returned buffers.
+Never hold references to engine cache leaves across a tick.
+
+Refactoring fast path
+---------------------
+Per-layer cache buffers are the canonical state; a refactor only re-views
+them under new stage ownership (zero-copy list re-slicing — no device
+traffic) and swaps in the target configuration's fused program from the
+executor cache.  ``refactor()`` reports ``compile_cache_hit`` and
+``new_traces`` so benchmarks can separate transition stall from XLA
+compilation; ``EngineConfig.warm_profiles`` precompiles all granularity
+profiles at engine start so steady-state refactors never trace.
+
 Continuous batching: fixed slot array; per-slot cache length (ragged decode
 through the position-vector path in models/layers.py).
 
 On this CPU container all stages share one device; on real hardware each
-StageExecutor pins to its own ICI slice (device_put on the stage's devices).
+stage program pins to its own ICI slice (device_put on the stage's devices).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Optional
 
 import jax
@@ -25,12 +52,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import layers as L
-from repro.models.kvcache import init_cache, cache_bytes, group_by_stage, regroup
+from repro.models.kvcache import group_by_stage, init_cache
 from repro.models.model import embed_tokens, lm_head
-from repro.models.transformer import BlockCtx, apply_block
+from repro.serving.executor_cache import ExecutorCache, trace_count
 from repro.serving.metrics import ServingStats
 from repro.serving.workload import Request
+
+
+def balanced_boundaries(n_layers: int, n_stages: int) -> list[int]:
+    """Balanced stage starts: remainder layers spread one-per-stage across
+    the leading stages (never dumped onto the last stage)."""
+    n = max(1, min(n_stages, n_layers))
+    base, rem = divmod(n_layers, n)
+    out = [0]
+    for i in range(n - 1):
+        out.append(out[-1] + base + (1 if i < rem else 0))
+    return out
 
 
 @dataclass
@@ -40,43 +77,14 @@ class EngineConfig:
     cache_dtype: str = "float32"
     eos_token: int = -1              # -1: run to max_new_tokens
     control_interval: float = 1.0    # controller cadence (sim-time seconds)
-
-
-class StageExecutor:
-    """One pipeline stage: layers [lo, hi) with jitted prefill/decode."""
-
-    def __init__(self, cfg: ModelConfig, params_blocks: list, lo: int, hi: int):
-        self.cfg, self.lo, self.hi = cfg, lo, hi
-        self.blocks = params_blocks[lo:hi]
-
-        def _prefill(blocks, x, caches, memory):
-            new = []
-            for i, bp in enumerate(blocks):
-                li = lo + i
-                ctx = BlockCtx(pos0=0, cache=caches[i], memory=memory,
-                               is_global=cfg.is_global_layer(li))
-                x, nc, _ = apply_block(cfg, cfg.layer_kind(li), bp, x, ctx)
-                new.append(nc)
-            return x, new
-
-        def _decode(blocks, x, caches, pos_vec, memory):
-            new = []
-            for i, bp in enumerate(blocks):
-                li = lo + i
-                ctx = BlockCtx(pos0=pos_vec, cache=caches[i], memory=memory,
-                               is_global=cfg.is_global_layer(li))
-                x, nc, _ = apply_block(cfg, cfg.layer_kind(li), bp, x, ctx)
-                new.append(nc)
-            return x, new
-
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode)
-
-    def prefill(self, x, caches, memory=None):
-        return self._prefill(self.blocks, x, caches, memory)
-
-    def decode(self, x, caches, pos_vec, memory=None):
-        return self._decode(self.blocks, x, caches, pos_vec, memory)
+    fused_decode: bool = True        # single-dispatch decode tick
+    prefill_buckets: bool = True     # pad prompts to pow2 buckets (when safe)
+    # layer runs at least this deep execute as a stacked lax.scan (compile
+    # time lever); shallower runs unroll for in-place donated cache updates
+    scan_threshold: int = 8
+    # granularity profiles (stage counts) to precompile at engine start so
+    # refactoring between them never traces; () = compile lazily
+    warm_profiles: tuple[int, ...] = ()
 
 
 @dataclass
@@ -85,48 +93,175 @@ class Slot:
     pos: int = 0                     # valid cache length
     generated: list = field(default_factory=list)
     done: bool = True
+    budget: int = 0                  # token budget clamped to fit max_seq
 
 
 class FlexPipeEngine:
     def __init__(self, cfg: ModelConfig, params: dict,
-                 boundaries: list[int], ecfg: EngineConfig = EngineConfig()):
+                 boundaries: list[int], ecfg: Optional[EngineConfig] = None):
         self.cfg = cfg
         self.params = params
-        self.ecfg = ecfg
+        self.ecfg = ecfg if ecfg is not None else EngineConfig()
         self.boundaries = list(boundaries)
         self.stats = ServingStats()
         self.refactor_events: list[dict] = []
-        dt = jnp.float32 if ecfg.cache_dtype == "float32" else jnp.bfloat16
-        # slot caches: per-layer list, batch dim = max_batch
-        self.caches = init_cache(cfg, ecfg.max_batch, ecfg.max_seq, dt)
-        self.slots = [Slot() for _ in range(ecfg.max_batch)]
+        self.cache_dtype = (jnp.float32 if self.ecfg.cache_dtype == "float32"
+                            else jnp.bfloat16)
+        # canonical state: per-layer cache list, batch dim = max_batch
+        self.caches = init_cache(cfg, self.ecfg.max_batch, self.ecfg.max_seq,
+                                 self.cache_dtype)
+        self.slots = [Slot() for _ in range(self.ecfg.max_batch)]
         self.queue: list[Request] = []
-        self._build_stages()
+        self.executors = ExecutorCache(
+            cfg, params, max_batch=self.ecfg.max_batch,
+            max_seq=self.ecfg.max_seq, cache_dtype=self.cache_dtype,
+            prefill_buckets=self.ecfg.prefill_buckets,
+            scan_threshold=self.ecfg.scan_threshold)
+        self._fused = None
+        if self.ecfg.fused_decode:
+            self._fused, _ = self.executors.fused_decode(tuple(self.boundaries))
+        if self.ecfg.warm_profiles:
+            self.warmup(self.ecfg.warm_profiles)
 
     # ------------------------------------------------------------------
-    def _build_stages(self) -> None:
-        bs = self.boundaries
-        ends = bs[1:] + [self.cfg.n_layers]
-        self.stages = [StageExecutor(self.cfg, self.params["blocks"], lo, hi)
-                       for lo, hi in zip(bs, ends)]
-        self.stage_caches = group_by_stage(self.caches, bs)
+    def _stage_ranges(self) -> list[tuple[int, int]]:
+        ends = self.boundaries[1:] + [self.cfg.n_layers]
+        return list(zip(self.boundaries, ends))
+
+    @property
+    def stage_caches(self) -> list[list]:
+        """Per-stage re-view of the per-layer caches (zero-copy slicing)."""
+        return group_by_stage(self.caches, self.boundaries)
+
+    def warmup(self, stage_counts: tuple[int, ...] = ()) -> dict:
+        """Precompile executors for the given granularity profiles (stage
+        counts) plus the current configuration.
+
+        Rotates ONE donated dummy cache through every configuration's
+        decode program, so warm-up costs a single extra cache allocation
+        and one throwaway tick per profile — after it, refactoring between
+        warmed profiles performs zero jit traces.  Each configuration's
+        stage-prefill programs are also compiled at the base prompt bucket
+        (larger pow2 buckets still trace lazily on first admission; on
+        non-bucketable archs prompt lengths are unbounded, so prefill always
+        compiles lazily).
+        """
+        t0 = time.perf_counter()
+        traces0 = trace_count()
+        keys = [tuple(self.boundaries)]
+        for n in stage_counts:
+            k = tuple(self._boundaries_for(n))
+            if k not in keys:
+                keys.append(k)
+        B = self.ecfg.max_batch
+        tok = jnp.zeros((B, 1), jnp.int32)
+        pos = jnp.zeros((B,), jnp.int32)
+        dummy = init_cache(self.cfg, B, self.ecfg.max_seq, self.cache_dtype)
+        out = None
+        for k in keys:
+            if self.ecfg.fused_decode:
+                prog, _ = self.executors.fused_decode(k)
+                out, dummy = prog.step(dummy, tok, pos)
+            else:
+                x = jnp.zeros((B, 1, self.cfg.d_model),
+                              self.params["embed"].dtype)
+                ends = list(k[1:]) + [self.cfg.n_layers]
+                for lo, hi in zip(k, ends):
+                    fn, _ = self.executors.stage_decode(lo, hi)
+                    x, new = fn(self.params["blocks"][lo:hi], x,
+                                dummy[lo:hi], pos, None)
+                    dummy[lo:hi] = new
+                out = x
+        for k in keys:
+            self._warm_prefill(list(k))
+        if out is not None:
+            jax.block_until_ready(out)
+        return {"configs": len(keys), "t": time.perf_counter() - t0,
+                "new_traces": trace_count() - traces0}
+
+    def _warm_prefill(self, boundaries: list[int]) -> None:
+        """Compile a configuration's stage-prefill programs at the smallest
+        prompt bucket so the first admission after a refactor doesn't stall
+        the tick loop on XLA (bucketable archs only)."""
+        if not self.executors.can_bucket:
+            return
+        S0 = self.executors.prefill_bucket(1)
+        ends = boundaries[1:] + [self.cfg.n_layers]
+        ranges = list(zip(boundaries, ends))
+        out = jnp.zeros((1, S0), jnp.int32)
+        slot_ix = jnp.zeros((), jnp.int32)
+        true_len = jnp.asarray(1, jnp.int32)
+        for si, (lo, hi) in enumerate(ranges):
+            fn, _ = self.executors.stage_prefill(
+                lo, hi, first=(si == 0), last=(si == len(ranges) - 1))
+            dummy = init_cache(self.cfg, self.ecfg.max_batch,
+                               self.ecfg.max_seq, self.cache_dtype,
+                               layers=range(lo, hi))
+            out, _ = fn(self.params["blocks"][lo:hi],
+                        self.executors.head_params, out, dummy, slot_ix,
+                        true_len, None)
+        jax.block_until_ready(out)
 
     def refactor(self, new_boundaries: list[int]) -> dict:
-        """Inflight refactoring: regroup stage boundaries + caches (Eq. 10).
+        """Inflight refactoring: re-group stage boundaries + caches (Eq. 10).
 
-        In-flight requests keep their slots and positions; only the layer->
-        stage ownership (and on real hardware, device placement) changes."""
+        In-flight requests keep their slots and positions.  Per-layer cache
+        buffers are untouched (zero-copy re-view under the new ownership);
+        the target configuration's fused program comes from the executor
+        cache — a hit costs a dict lookup, a miss compiles eagerly here
+        (reported via ``compile_cache_hit`` / ``new_traces``) so the decode
+        loop never stalls on XLA mid-stream."""
         t0 = time.perf_counter()
         old = list(self.boundaries)
-        self.stage_caches = regroup(self.stage_caches, new_boundaries)
-        self.caches = [c for st in self.stage_caches for c in st]
+        traces0 = trace_count()
         self.boundaries = list(new_boundaries)
-        self._build_stages()
+        hit = True
+        if self.ecfg.fused_decode:
+            self._fused, registered = self.executors.fused_decode(
+                tuple(self.boundaries))
+            # a program registered but never executed still owes its jit
+            # trace+compile: pay it here, not on the next decode tick, and
+            # report the hit only when it was genuinely compiled already
+            hit = registered and self._fused.compiled
+            if not self._fused.compiled:
+                self._compile_fused(self._fused)
+        else:
+            missed = []
+            for lo, hi in self._stage_ranges():
+                fn, h = self.executors.stage_decode(lo, hi)
+                hit = hit and h
+                if not h:
+                    missed.append((lo, hi, fn))
+            if missed:
+                self._compile_stages(missed)
         ev = {"t": time.perf_counter() - t0, "from": old,
               "to": list(new_boundaries),
-              "inflight": sum(1 for s in self.slots if not s.done)}
+              "inflight": sum(1 for s in self.slots if not s.done),
+              "compile_cache_hit": hit,
+              "new_traces": trace_count() - traces0}
         self.refactor_events.append(ev)
         return ev
+
+    def _compile_fused(self, prog) -> None:
+        """Force trace+compile off the decode stream via a throwaway tick on
+        a donated dummy cache (the engine's live caches are never touched)."""
+        B = self.ecfg.max_batch
+        dummy = init_cache(self.cfg, B, self.ecfg.max_seq, self.cache_dtype)
+        nxt, _ = prog.step(dummy, jnp.zeros((B, 1), jnp.int32),
+                           jnp.zeros((B,), jnp.int32))
+        jax.block_until_ready(nxt)
+
+    def _compile_stages(self, missed: list) -> None:
+        """Eagerly trace+compile missed per-stage decode programs on dummy
+        caches so the unfused decode loop never stalls on XLA mid-stream."""
+        B = self.ecfg.max_batch
+        pos = jnp.zeros((B,), jnp.int32)
+        x = jnp.zeros((B, 1, self.cfg.d_model), self.params["embed"].dtype)
+        for lo, hi, fn in missed:
+            dummy = init_cache(self.cfg, B, self.ecfg.max_seq,
+                               self.cache_dtype, layers=range(lo, hi))
+            out, _ = fn(self.params["blocks"][lo:hi], x, dummy, pos, None)
+            jax.block_until_ready(out)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -138,75 +273,110 @@ class FlexPipeEngine:
                 continue
             req = self.queue.pop(0)
             req.start = now
-            self._prefill_into_slot(slot_id, req)
+            self._prefill_into_slot(slot_id, req, now)
 
-    def _prefill_into_slot(self, slot_id: int, req: Request) -> None:
+    def _prefill_into_slot(self, slot_id: int, req: Request,
+                           now: float = 0.0) -> None:
         cfg = self.cfg
         prompt = np.asarray(req.prompt_tokens) if hasattr(req, "prompt_tokens") \
             else np.arange(req.prompt_len) % cfg.vocab_size
-        prompt = prompt[: self.ecfg.max_seq - req.max_new_tokens - 1]
-        tokens = jnp.asarray(prompt, jnp.int32)[None, :]
-        x = embed_tokens(cfg, self.params, tokens)
-        # batch-1 caches for the prefill, then scatter into the slot
-        dt = self.caches[0]["mixer"]["k"].dtype if "mixer" in self.caches[0] \
-            and "k" in self.caches[0].get("mixer", {}) else jnp.float32
-        tmp = init_cache(cfg, 1, self.ecfg.max_seq, dt)
-        tmp_stages = group_by_stage(tmp, self.boundaries)
+        # prompt + generated tokens must fit the cache: truncate the prompt
+        # first (keeping >= 1 token), then clamp the decode budget to the
+        # remaining rows so decode can never write past max_seq
+        prompt = prompt[: max(1, self.ecfg.max_seq - req.max_new_tokens - 1)]
+        S = int(prompt.shape[0])
+        budget = min(req.max_new_tokens, self.ecfg.max_seq - S - 1)
+        Sp = self.executors.prefill_bucket(S)
+        toks = np.zeros((1, Sp), np.int32)
+        toks[0, :S] = prompt
         memory = getattr(req, "memory", None)
-        for st, tc in zip(self.stages, tmp_stages):
-            x, new = st.prefill(x, tc, memory)
-            tc[:] = new
-        logits = lm_head(cfg, self.params, x[:, -1:, :])[0, -1]
-        flat_tmp = [c for stc in tmp_stages for c in stc]
-        self._write_slot_cache(slot_id, flat_tmp)
+        ranges = self._stage_ranges()
+        out = jnp.asarray(toks)
+        slot_ix = jnp.asarray(slot_id, jnp.int32)
+        true_len = jnp.asarray(S, jnp.int32)
+        for si, (lo, hi) in enumerate(ranges):
+            fn, _ = self.executors.stage_prefill(
+                lo, hi, first=(si == 0), last=(si == len(ranges) - 1))
+            out, new = fn(self.params["blocks"][lo:hi],
+                          self.executors.head_params, out,
+                          self.caches[lo:hi], slot_ix, true_len, memory)
+            self.caches[lo:hi] = new
         slot = self.slots[slot_id]
         slot.request = req
-        slot.pos = tokens.shape[1]
-        slot.generated = [int(jnp.argmax(logits))]
+        slot.pos = S
+        slot.budget = budget
+        first = int(np.asarray(out)[0])              # first sampled token
+        slot.generated = [first]
         slot.done = False
-
-    def _write_slot_cache(self, slot_id: int, batch1_caches: list) -> None:
-        def write(dst, src):
-            return dst.at[slot_id:slot_id + 1].set(src.astype(dst.dtype))
-        self.caches = jax.tree.map(write, self.caches, batch1_caches)
-        self.stage_caches = group_by_stage(self.caches, self.boundaries)
+        eos = self.ecfg.eos_token
+        if budget <= 1 or (eos >= 0 and first == eos):
+            # budget already exhausted by the prefill's token: finish now
+            # rather than letting the next tick overshoot max_new_tokens
+            req.finish = now
+            self.stats.record(now, req.latency, req.met_slo,
+                              queue_s=max(req.start - req.arrival, 0.0))
+            slot.done = True
+            slot.request = None
 
     # ------------------------------------------------------------------
     def decode_step(self, now: float) -> int:
-        """One decode tick for all active slots; returns #active."""
-        active = [i for i, s in enumerate(self.slots) if not s.done]
-        if not active:
-            return 0
-        cfg = self.cfg
+        """One decode tick for all active slots; returns #active.
+
+        Fused path: one XLA dispatch for embed + all stages + lm_head +
+        argmax; the engine's caches are donated and replaced by the tick's
+        outputs, and only B int32 token ids come back to host."""
         B = self.ecfg.max_batch
+        active = np.array([not s.done for s in self.slots])
+        n_active = int(active.sum())
+        if not n_active:
+            return 0
         tok = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
-        for i in active:
-            tok[i, 0] = self.slots[i].generated[-1]
-            pos[i] = self.slots[i].pos
-        x = embed_tokens(cfg, self.params, jnp.asarray(tok),
-                         pos0=jnp.asarray(pos))
-        pos_v = jnp.asarray(pos)
-        for si, st in enumerate(self.stages):
-            x, new = st.decode(x, self.stage_caches[si], pos_v)
-            self.stage_caches[si] = new
-        self.caches = [c for stc in self.stage_caches for c in stc]
-        logits = lm_head(cfg, self.params, x)[:, -1, :]
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for i in active:
+        for i in np.nonzero(active)[0]:
+            s = self.slots[i]
+            tok[i, 0] = s.generated[-1]
+            pos[i] = s.pos
+        if self._fused is not None:
+            nxt_dev, new = self._fused.step(self.caches, jnp.asarray(tok),
+                                            jnp.asarray(pos))
+            self.caches = new
+            nxt = np.asarray(nxt_dev)
+        else:
+            nxt = self._decode_unfused(tok, pos)
+        # EOS / length bookkeeping, vectorized in numpy
+        gen = np.array([len(s.generated) for s in self.slots])
+        lim = np.array([s.budget if s.request else 0 for s in self.slots])
+        eos = self.ecfg.eos_token
+        hit_eos = (eos >= 0) & (nxt == eos)
+        finished = active & ((gen + 1 >= lim) | hit_eos)
+        for i in np.nonzero(active)[0]:
             s = self.slots[i]
             s.generated.append(int(nxt[i]))
             s.pos += 1
+        for i in np.nonzero(finished)[0]:
+            s = self.slots[i]
             req = s.request
-            hit_eos = (self.ecfg.eos_token >= 0
-                       and int(nxt[i]) == self.ecfg.eos_token)
-            if len(s.generated) >= req.max_new_tokens or hit_eos:
-                req.finish = now
-                self.stats.record(now, req.latency, req.met_slo,
-                                  queue_s=max(req.start - req.arrival, 0.0))
-                s.done = True
-                s.request = None
-        return len(active)
+            req.finish = now
+            self.stats.record(now, req.latency, req.met_slo,
+                              queue_s=max(req.start - req.arrival, 0.0))
+            s.done = True
+            s.request = None
+        return n_active
+
+    def _decode_unfused(self, tok: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        """Per-stage decode loop (pre-fusion path, kept for benchmarking
+        before/after and as a fallback): one dispatch per stage plus a
+        host-side argmax over full logits."""
+        x = embed_tokens(self.cfg, self.params, jnp.asarray(tok),
+                         pos0=jnp.asarray(pos))
+        pos_v = jnp.asarray(pos)
+        for lo, hi in self._stage_ranges():
+            fn, _ = self.executors.stage_decode(lo, hi)
+            x, new = fn(self.params["blocks"][lo:hi], x, self.caches[lo:hi],
+                        pos_v, None)
+            self.caches[lo:hi] = new
+        logits = lm_head(self.cfg, self.params, x)[:, -1, :]
+        return np.asarray(jnp.argmax(logits, axis=-1))
 
     # ------------------------------------------------------------------
     def run(self, requests: list[Request], controller=None,
@@ -237,7 +407,4 @@ class FlexPipeEngine:
         return self.stats
 
     def _boundaries_for(self, n_stages: int) -> list[int]:
-        L_ = self.cfg.n_layers
-        n = min(n_stages, L_)
-        per = L_ // n
-        return [k * per for k in range(n)]
+        return balanced_boundaries(self.cfg.n_layers, n_stages)

@@ -5,7 +5,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.configs.base import get_arch
 from repro.core.affinity import AffinityScheduler, HostParamCache
