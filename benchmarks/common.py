@@ -6,6 +6,7 @@ import copy
 import numpy as np
 
 from repro.serving.cluster import FragmentedCluster
+from repro.serving.faults import FaultInjector
 from repro.serving.simulator import ClusterSim, POLICIES, table2_profile
 from repro.serving.workload import synth_requests
 
@@ -13,7 +14,13 @@ from repro.serving.workload import synth_requests
 def run_policy(name: str, *, cv: float, rate: float = 20.0,
                duration: float = 600.0, slo: float = 4.0, seed: int = 0,
                peak_instances: int = 4, static_stages: int | None = None,
-               deadline_s: float | None = None):
+               deadline_s: float | None = None, cluster_seed: int = 1,
+               service_seed: int = 2, fault_seed: int = 0,
+               preempt_rate: float = 0.0, oom_rate: float = 0.0,
+               comm_rate: float = 0.0, slowdown_rate: float = 0.0):
+    """One policy run with every RNG seeded explicitly — injected-fault
+    runs are byte-reproducible from (seed, cluster_seed, service_seed,
+    fault_seed) alone (the ``--fault-seed`` CLI contract)."""
     rng = np.random.default_rng(seed)
     reqs = synth_requests(rng, rate=rate, cv=cv, duration=duration,
                           deadline_s=deadline_s or slo)
@@ -21,9 +28,16 @@ def run_policy(name: str, *, cv: float, rate: float = 20.0,
     if static_stages is not None:
         pol.static_stages = static_stages
         pol.adaptive = False
-    sim = ClusterSim(pol, FragmentedCluster.synth(np.random.default_rng(1)),
-                     np.random.default_rng(2), slo=slo,
-                     peak_instances=peak_instances)
+    injector = None
+    if preempt_rate or oom_rate or comm_rate or slowdown_rate:
+        injector = FaultInjector(seed=fault_seed, horizon=duration,
+                                 preempt_rate=preempt_rate,
+                                 oom_rate=oom_rate, comm_rate=comm_rate,
+                                 slowdown_rate=slowdown_rate)
+    sim = ClusterSim(pol, FragmentedCluster.synth(seed=cluster_seed),
+                     np.random.default_rng(service_seed), slo=slo,
+                     peak_instances=peak_instances,
+                     fault_injector=injector)
     out = sim.run(reqs)
     out["stats"] = sim.stats
     out["n_requests"] = len(reqs)

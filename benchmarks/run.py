@@ -20,6 +20,7 @@ MODULES = [
     "fig11_stall_recovery",   # Fig 11
     "fig12_efficiency",       # Fig 12
     "fig13_prefill",          # Fig 13
+    "fig14_fault_recovery",   # Fig 14 (ours): fault injection
     "kernels_micro",          # kernel regression numbers
 ]
 

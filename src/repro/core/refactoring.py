@@ -31,15 +31,33 @@ from repro.models.kvcache import group_by_stage, migration_plan, regroup, cache_
 
 @dataclass
 class CacheSnapshot:
-    """Token-level validity-masked snapshot of per-layer caches."""
+    """Token-level validity-masked snapshot of per-layer caches.
+
+    ``valid_len`` is either a scalar (one validity horizon for the whole
+    batch) or a per-slot ``(B,)`` array (each batch slot carries its own
+    committed-token count — the engine's continuous-batching snapshots)."""
     per_layer: list                       # per-layer cache pytrees
-    valid_len: int                        # tokens valid at snapshot time
+    valid_len: object                     # int | (B,) int array
 
 
-def snapshot(per_layer_caches: list, valid_len: int) -> CacheSnapshot:
+def snapshot(per_layer_caches: list, valid_len) -> CacheSnapshot:
     return CacheSnapshot(
         per_layer=jax.tree.map(jnp.copy, per_layer_caches),
         valid_len=valid_len)
+
+
+# Which leaf names hold per-token (positional) state, and on which axis the
+# token position lives; every other leaf is O(1) recurrent state where the
+# live value subsumes the snapshot (ssm/conv/rwkv/sx_*).
+_POSITIONAL_AXES = {"k": 2, "v": 2, "latent": 1, "k_rope": 1}
+
+
+def _leaf_name(path) -> str | None:
+    from jax.tree_util import DictKey
+    for entry in reversed(path):
+        if isinstance(entry, DictKey):
+            return str(entry.key)
+    return None
 
 
 def merge_with_mask(snap: CacheSnapshot, live: list, live_len: int,
@@ -48,20 +66,37 @@ def merge_with_mask(snap: CacheSnapshot, live: list, live_len: int,
 
     Tokens [0, snap.valid_len) come from the snapshot; tokens
     [snap.valid_len, live_len) (decoded while the migration was in flight)
-    come from the live cache.  For attention caches the merge is positional;
+    come from the live cache.  For attention-style caches (k/v, MLA
+    latent/k_rope) the merge is positional along that leaf's token axis;
     O(1) state caches (ssm/rwkv/conv) take the LIVE value (their state at
-    live_len subsumes earlier state).
+    live_len subsumes earlier state).  A per-slot ``valid_len`` array
+    masks each batch row at its own horizon (batch axis 0).
     """
-    def one(s_leaf, l_leaf):
-        if s_leaf.ndim >= 3 and s_leaf.shape[seq_axis_hint] >= live_len > 0:
-            pos = jnp.arange(s_leaf.shape[seq_axis_hint])
-            mask = (pos < snap.valid_len)
-            shape = [1] * s_leaf.ndim
-            shape[seq_axis_hint] = -1
-            m = mask.reshape(shape)
-            return jnp.where(m, s_leaf, l_leaf)
-        return l_leaf                      # O(1) state: live value wins
-    return jax.tree.map(one, snap.per_layer, live)
+    from jax.tree_util import tree_map_with_path
+
+    valid = snap.valid_len
+    per_slot = hasattr(valid, "ndim") and np.ndim(valid) == 1
+    valid_arr = jnp.asarray(valid)
+
+    def one(path, s_leaf, l_leaf):
+        name = _leaf_name(path)
+        axis = _POSITIONAL_AXES.get(name, seq_axis_hint if name is None
+                                    else None)
+        if axis is None or s_leaf.ndim <= axis \
+                or not (s_leaf.shape[axis] >= live_len > 0):
+            return l_leaf                  # O(1) state: live value wins
+        pos = jnp.arange(s_leaf.shape[axis])
+        shape = [1] * s_leaf.ndim
+        shape[axis] = -1
+        if per_slot:
+            vshape = [1] * s_leaf.ndim
+            vshape[0] = -1                 # batch axis
+            m = pos.reshape(shape) < valid_arr.reshape(vshape)
+        else:
+            m = (pos < valid_arr).reshape(shape)
+        return jnp.where(m, s_leaf, l_leaf)
+
+    return tree_map_with_path(one, snap.per_layer, live)
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,8 @@ from repro.core.controller import FlexPipeController
 from repro.core.granularity import GranularityProfile
 from repro.models.transformer import init_model
 from repro.serving.engine import EngineConfig, FlexPipeEngine
+from repro.serving.faults import (FaultInjector, FaultPolicy,
+                                  StageHealthMonitor)
 from repro.serving.workload import synth_requests
 
 
@@ -26,6 +28,13 @@ def main() -> None:
     ap.add_argument("--cv", type=float, default=2.0)
     ap.add_argument("--duration", type=float, default=5.0)
     ap.add_argument("--max-batch", type=int, default=4)
+    # fault injection (0 disables a kind); the schedule is fully determined
+    # by --fault-seed, so fault runs are byte-reproducible
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--preempt-rate", type=float, default=0.0,
+                    help="stage preemptions per second of sim time")
+    ap.add_argument("--slowdown-rate", type=float, default=0.0)
+    ap.add_argument("--request-timeout", type=float, default=30.0)
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -45,7 +54,17 @@ def main() -> None:
                              max_batch=args.max_batch, max_seq=96,
                              # precompile every granularity the controller
                              # can pick: refactors then never stall on XLA
-                             warm_profiles=tuple(p.stages for p in profiles)))
+                             warm_profiles=tuple(p.stages for p in profiles),
+                             # bound post-preemption replay to 8 ticks
+                             snapshot_interval=8))
+    if args.preempt_rate or args.slowdown_rate:
+        eng.attach_faults(
+            injector=FaultInjector(seed=args.fault_seed,
+                                   horizon=args.duration,
+                                   preempt_rate=args.preempt_rate,
+                                   slowdown_rate=args.slowdown_rate),
+            policy=FaultPolicy(timeout_s=args.request_timeout),
+            monitor=StageHealthMonitor())
     rng = np.random.default_rng(0)
     reqs = synth_requests(rng, rate=args.rate, cv=args.cv,
                           duration=args.duration, prompt_mean=24,
@@ -56,6 +75,11 @@ def main() -> None:
     lat = stats.latency_percentiles()
     print(f"completed={stats.completed} p50={lat['p50']:.2f}s "
           f"p99={lat['p99']:.2f}s refactors={len(eng.refactor_events)}")
+    if eng.faults is not None:
+        s = stats.fault_summary(args.duration)
+        print(f"faults={s['counters']} recoveries={s['recoveries']} "
+              f"median_recovery={s['median_recovery_s'] * 1e3:.1f}ms "
+              f"failed={len(eng.failed_requests)}")
 
 
 if __name__ == "__main__":

@@ -48,9 +48,18 @@ class FragmentedCluster:
         self.rng = rng
 
     @classmethod
-    def synth(cls, rng: np.random.Generator, n_servers: int = 42,
+    def synth(cls, rng=None, n_servers: int = 42,
               n_gpus: int = 82, gpu_mem: float = 80e9,
-              racks: int = 6) -> "FragmentedCluster":
+              racks: int = 6, seed: int | None = None) -> "FragmentedCluster":
+        """Synthesize a cluster.  ``rng`` may be a Generator or an int seed;
+        ``seed=`` is an explicit alternative so fault-injected runs can be
+        byte-reproduced from CLI flags."""
+        if seed is not None:
+            rng = np.random.default_rng(seed)
+        elif isinstance(rng, (int, np.integer)):
+            rng = np.random.default_rng(int(rng))
+        elif rng is None:
+            rng = np.random.default_rng(0)
         servers = [Server(sid=i, rack=i % racks) for i in range(n_servers)]
         gpus = []
         gid = 0
@@ -113,6 +122,14 @@ class FragmentedCluster:
             g.used_mem = max(g.used_mem - mem_each, 0.0)
             if self.rng.random() < churn_prob:
                 g.bg_mem = min(g.bg_mem + 0.5 * mem_each, g.mem * 0.99)
+
+    def preempt(self, gpus: list[GPUDev], mem_each: float) -> None:
+        """Our allocation is evicted mid-service: the freed memory is grabbed
+        by the background tenant immediately (churn_prob=1) — the victim
+        cannot simply re-allocate in place after a preemption."""
+        for g in gpus:
+            g.used_mem = max(g.used_mem - mem_each, 0.0)
+            g.bg_mem = min(g.bg_mem + mem_each, g.mem * 0.99)
 
     def mean_utilization(self) -> float:
         return float(np.mean([(g.bg_mem + g.used_mem) / g.mem for g in self.gpus]))

@@ -52,9 +52,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.refactoring import CacheSnapshot, merge_with_mask, snapshot
 from repro.models.kvcache import group_by_stage, init_cache
 from repro.models.model import embed_tokens, lm_head
 from repro.serving.executor_cache import ExecutorCache, trace_count
+from repro.serving.faults import (COMM_TRANSIENT, OOM, PREEMPT_STAGE,
+                                  SLOWDOWN)
 from repro.serving.metrics import ServingStats
 from repro.serving.workload import Request
 
@@ -85,6 +88,11 @@ class EngineConfig:
     # granularity profiles (stage counts) to precompile at engine start so
     # refactoring between them never traces; () = compile lazily
     warm_profiles: tuple[int, ...] = ()
+    # Eq. 10 snapshot cadence in decode ticks (0 = off): every interval-th
+    # tick the engine copies the per-layer caches + per-slot valid lengths
+    # to a host-side CacheSnapshot, bounding the replay delta after a
+    # stage preemption to at most `snapshot_interval` ticks
+    snapshot_interval: int = 0
 
 
 @dataclass
@@ -94,6 +102,7 @@ class Slot:
     generated: list = field(default_factory=list)
     done: bool = True
     budget: int = 0                  # token budget clamped to fit max_seq
+    prompt: Optional[np.ndarray] = None  # admitted prompt (replay source)
 
 
 class FlexPipeEngine:
@@ -120,6 +129,17 @@ class FlexPipeEngine:
         self._fused = None
         if self.ecfg.fused_decode:
             self._fused, _ = self.executors.fused_decode(tuple(self.boundaries))
+        # fault-tolerance state (armed via attach_faults)
+        self.faults = None               # FaultInjector
+        self.fault_policy = None         # FaultPolicy
+        self.health = None               # StageHealthMonitor
+        self.recovery_events: list[dict] = []
+        self.failed_requests: list[Request] = []
+        self._snapshot: Optional[CacheSnapshot] = None
+        self._snap_rids: list = []
+        self._dead: set[int] = set()
+        self._slowdowns: dict[int, tuple[float, float]] = {}
+        self._tick_count = 0
         if self.ecfg.warm_profiles:
             self.warmup(self.ecfg.warm_profiles)
 
@@ -264,6 +284,254 @@ class FlexPipeEngine:
             jax.block_until_ready(out)
 
     # ------------------------------------------------------------------
+    # Fault tolerance: detection, emergency inflight refactor, replay
+    # ------------------------------------------------------------------
+    def attach_faults(self, injector=None, policy=None, monitor=None) -> None:
+        """Arm the fault stack (serving/faults.py): a FaultInjector that
+        schedules preemption/OOM/comm/slowdown events, a FaultPolicy for
+        request timeout/retry/degradation, and a StageHealthMonitor whose
+        heartbeats + tick watchdog drive detection."""
+        self.faults = injector
+        self.fault_policy = policy
+        self.health = monitor
+        if monitor is not None:
+            monitor.reset(len(self.boundaries), 0.0)
+
+    def _maybe_snapshot(self) -> None:
+        """Periodic Eq. 10 snapshot: host-side copy of the per-layer caches
+        with each slot's committed-token count as its validity horizon."""
+        iv = self.ecfg.snapshot_interval
+        if not iv:
+            return
+        self._tick_count += 1
+        if self._tick_count % iv:
+            return
+        pos = np.array([0 if s.done else s.pos for s in self.slots],
+                       np.int64)
+        if not pos.any():
+            return
+        self._snapshot = snapshot(self.caches, pos)
+        self._snap_rids = [s.request.rid if (not s.done and s.request)
+                           else None for s in self.slots]
+
+    def fault_step(self, now: float) -> list[dict]:
+        """Pre-tick fault handling: poll injected events, beat surviving
+        stages, and run detection + emergency recovery.  Called by run()
+        before every decode tick (and usable from manual tick loops)."""
+        recs: list[dict] = []
+        if self.faults is None and not self._dead:
+            return recs
+        if self.faults is not None:
+            for ev in self.faults.poll(now):
+                n_stages = len(self.boundaries)
+                self.stats.bump("faults_injected")
+                self.stats.fault_log.append((now, ev.kind, ev.detail))
+                if ev.kind in (PREEMPT_STAGE, OOM):
+                    self.stats.bump("preemptions" if ev.kind == PREEMPT_STAGE
+                                    else "oom_events")
+                    self._dead.add(ev.stage % n_stages)
+                elif ev.kind == COMM_TRANSIENT:
+                    # transient send/recv failure: the tick is retransmitted
+                    # transparently; no state is lost
+                    self.stats.bump("comm_errors")
+                elif ev.kind == SLOWDOWN:
+                    self.stats.bump("slowdowns")
+                    self._slowdowns[ev.stage % n_stages] = (
+                        now + ev.duration, ev.factor)
+        if not self._dead:
+            return recs
+        # detection: dead stages miss their heartbeat window; with no
+        # monitor attached the dispatch failure itself is the detector
+        if self.health is not None:
+            for s in range(len(self.boundaries)):
+                if s not in self._dead:
+                    self.health.heartbeat(s, now)
+            detected = [s for s in self.health.dead_stages(now)
+                        if s in self._dead]
+        else:
+            detected = sorted(self._dead)
+        if detected:
+            recs.append(self._on_stage_failure(detected, now,
+                                               reason="preemption"))
+        return recs
+
+    def health_step(self, now: float, tick_wall_s: float) -> Optional[dict]:
+        """Post-tick watchdog: observe the decode tick's wall time (scaled
+        by any injected slowdown) and gracefully migrate away from a
+        straggling stage once the patience threshold trips."""
+        if self.health is None:
+            return None
+        slow = [(s, f) for s, (until, f) in self._slowdowns.items()
+                if until > now]
+        factor = max((f for _, f in slow), default=1.0)
+        verdict = self.health.observe_tick(tick_wall_s * factor)
+        if verdict == "straggler" and slow:
+            return self._migrate_from_straggler(slow[0][0], now)
+        return None
+
+    def _migrate_from_straggler(self, stage: int, now: float) -> dict:
+        """Llumnix-style graceful migration: the straggling stage is still
+        reachable, so its KV moves with the refactor (zero-copy regroup) —
+        no replay, no lost rows, outputs bit-identical."""
+        t0 = time.perf_counter()
+        n_new = max(len(self.boundaries) - 1, 1)
+        ev = self.refactor(self._boundaries_for(n_new))
+        ev["emergency"] = True
+        ev["reason"] = "straggler"
+        self._slowdowns.clear()
+        if self.health is not None:
+            self.health.reset(len(self.boundaries), now)
+        rec = {"t": now, "kind": "graceful_migration", "stage": stage,
+               "reason": "straggler", "recovery_s": time.perf_counter() - t0,
+               "refactor": ev, "replayed_ticks": 0,
+               "compile_cache_hit": ev["compile_cache_hit"],
+               "new_traces": ev["new_traces"]}
+        self.stats.bump("graceful_migrations")
+        self.stats.record_recovery(rec["recovery_s"], t=now,
+                                   kind="graceful_migration")
+        self.recovery_events.append(rec)
+        return rec
+
+    def _on_stage_failure(self, stages: list[int], now: float,
+                          reason: str = "preemption") -> dict:
+        """Emergency inflight refactor after stage preemption (KV lost).
+
+        detect -> refactor -> restore -> replay: the failed stages' layer
+        caches are dropped (that memory is gone), boundaries re-partition
+        around the surviving stage budget (warm profiles mean zero-retrace
+        recovery), committed rows are restored from the latest Eq. 10
+        snapshot via merge_with_mask, and only the delta decoded since the
+        snapshot is replayed.  Slots not covered by the snapshot re-prefill
+        their full history from valid_len=0.  No committed token is ever
+        lost: the generated text lives host-side in the slots."""
+        t0 = time.perf_counter()
+        B = self.ecfg.max_batch
+        ranges = self._stage_ranges()
+        stages = sorted({min(max(s, 0), len(ranges) - 1) for s in stages})
+        lost_layers = [li for s in stages for li in range(*ranges[s])]
+        for s in stages:                  # that device memory is gone
+            lo, hi = ranges[s]
+            self.caches[lo:hi] = init_cache(self.cfg, B, self.ecfg.max_seq,
+                                            self.cache_dtype,
+                                            layers=range(lo, hi))
+        n_new = max(len(ranges) - len(stages), 1)
+        nb = self._boundaries_for(n_new)
+        was_warm = self.executors.is_warm(nb)
+        ev = self.refactor(nb)
+        ev["emergency"] = True
+        ev["reason"] = reason
+        # Eq. 10 restore: committed rows < valid[i] come from the snapshot,
+        # anything newer keeps the live value (surviving stages) or the
+        # zeros just written (lost stages -> replayed below)
+        valid = np.zeros(B, np.int64)
+        if self._snapshot is not None:
+            snap_pos = np.asarray(self._snapshot.valid_len)
+            for i, s in enumerate(self.slots):
+                if not s.done and s.request is not None \
+                        and i < len(self._snap_rids) \
+                        and self._snap_rids[i] == s.request.rid:
+                    valid[i] = min(int(snap_pos[i]), s.pos)
+            if valid.any():
+                live_len = int(max(s.pos for s in self.slots if not s.done))
+                self.caches = merge_with_mask(
+                    CacheSnapshot(self._snapshot.per_layer, valid),
+                    self.caches, live_len)
+        replayed = self._replay(valid)
+        dt = time.perf_counter() - t0
+        rec = {"t": now, "kind": "emergency_refactor", "reason": reason,
+               "stages_lost": stages, "layers_lost": lost_layers,
+               "recovery_s": dt, "refactor": ev, "was_warm": was_warm,
+               "replayed_ticks": replayed,
+               "compile_cache_hit": ev["compile_cache_hit"],
+               "new_traces": ev["new_traces"]}
+        self.stats.bump("emergency_refactors")
+        self.stats.bump("replayed_ticks", replayed)
+        self.stats.record_recovery(dt, t=now, kind="emergency_refactor",
+                                   detail=reason)
+        self.recovery_events.append(rec)
+        self._dead.clear()
+        self._slowdowns.clear()
+        if self.health is not None:
+            self.health.reset(len(self.boundaries), now)
+        return rec
+
+    def _replay(self, valid: np.ndarray) -> int:
+        """Replay committed tokens through the decode path to rebuild lost
+        cache rows: slot i replays positions [valid[i], pos) — the delta
+        since the snapshot, or its full history when valid[i] == 0.
+
+        Replay feeds the SAME tokens at the SAME positions through the
+        (refactored) decode program, so rebuilt rows are bit-identical to
+        the originals for snapshot-covered slots; sampled outputs are
+        discarded (the committed text is already host-side)."""
+        active = [i for i, s in enumerate(self.slots) if not s.done]
+        if not active:
+            return 0
+        B = self.ecfg.max_batch
+        hist = {}
+        for i in active:
+            s = self.slots[i]
+            h = np.concatenate([
+                np.asarray(s.prompt, dtype=np.int64),
+                np.asarray(s.generated[:-1], dtype=np.int64)])
+            assert len(h) == s.pos, "history must cover committed rows"
+            hist[i] = h
+        cursor = {i: int(valid[i]) for i in active}
+        ticks = 0
+        while any(cursor[i] < self.slots[i].pos for i in active):
+            tok = np.zeros((B, 1), np.int32)
+            pos = np.zeros((B,), np.int32)
+            for i in active:
+                # caught-up slots idempotently rewrite their last row
+                p = min(cursor[i], self.slots[i].pos - 1)
+                tok[i, 0] = hist[i][p]
+                pos[i] = p
+            if self._fused is not None:
+                _, new = self._fused.step(self.caches, jnp.asarray(tok),
+                                          jnp.asarray(pos))
+                self.caches = new
+            else:
+                self._decode_unfused(tok, pos)
+            for i in active:
+                cursor[i] = min(cursor[i] + 1, self.slots[i].pos)
+            ticks += 1
+        return ticks
+
+    def _apply_fault_policy(self, now: float) -> None:
+        """Request-level timeout/retry/degradation (FaultPolicy)."""
+        pol = self.fault_policy
+        if pol is None:
+            return
+        for s in self.slots:
+            if s.done or s.request is None:
+                continue
+            req = s.request
+            started = req.start if req.start >= 0 else now
+            if now - started <= pol.timeout_s:
+                continue
+            # abort this attempt; committed partial output is discarded
+            s.done = True
+            s.request = None
+            s.generated = []
+            s.pos = 0
+            req.attempts += 1
+            if pol.should_retry(req.attempts):
+                self.stats.bump("retries")
+                req.retry_at = now + pol.backoff(req.attempts)
+                if pol.degrade_last_attempt \
+                        and pol.is_last_attempt(req.attempts):
+                    req.max_new_tokens = pol.degraded_budget(
+                        req.max_new_tokens)
+                    req.degraded = True
+                    self.stats.bump("degraded")
+                self.queue.append(req)
+            else:
+                req.failed = True
+                req.fail_reason = f"timeout after {req.attempts} attempts"
+                self.stats.bump("request_failures")
+                self.failed_requests.append(req)
+
+    # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
@@ -271,7 +539,12 @@ class FlexPipeEngine:
         for slot_id, slot in enumerate(self.slots):
             if not slot.done or not self.queue:
                 continue
-            req = self.queue.pop(0)
+            # retried requests wait out their backoff before re-admission
+            j = next((k for k, r in enumerate(self.queue)
+                      if r.retry_at <= now), None)
+            if j is None:
+                break
+            req = self.queue.pop(j)
             req.start = now
             self._prefill_into_slot(slot_id, req, now)
 
@@ -304,6 +577,7 @@ class FlexPipeEngine:
         slot = self.slots[slot_id]
         slot.request = req
         slot.pos = S
+        slot.prompt = prompt.astype(np.int64)
         slot.budget = budget
         first = int(np.asarray(out)[0])              # first sampled token
         slot.generated = [first]
@@ -361,6 +635,7 @@ class FlexPipeEngine:
                               queue_s=max(req.start - req.arrival, 0.0))
             s.done = True
             s.request = None
+        self._maybe_snapshot()
         return n_active
 
     def _decode_unfused(self, tok: np.ndarray, pos: np.ndarray) -> np.ndarray:
@@ -393,8 +668,12 @@ class FlexPipeEngine:
                 if controller is not None:
                     controller.on_request(pending[i].arrival)
                 i += 1
+            self._apply_fault_policy(now)
             self._admit(now)
+            self.fault_step(now)
+            t_tick = time.perf_counter()
             n = self.decode_step(now)
+            self.health_step(now, time.perf_counter() - t_tick)
             if controller is not None and now - last_ctl >= self.ecfg.control_interval:
                 last_ctl = now
                 d, _ = controller.control_step(now, len(self.queue))

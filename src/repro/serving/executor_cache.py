@@ -299,6 +299,15 @@ class ExecutorCache:
             (self.cfg, "decode", lo, hi),
             lambda: _stage_decode_fn(self.cfg, lo, hi)))
 
+    def is_warm(self, boundaries) -> bool:
+        """Probe (no hit/miss accounting): is this configuration's fused
+        program already built AND compiled?  The engine's emergency
+        recovery path reports this so benchmarks can attribute recovery
+        time to transition vs XLA compile."""
+        key = ("fused", tuple(int(b) for b in boundaries))
+        prog = self._local.get(key)
+        return bool(prog is not None and prog.compiled)
+
     # -- helpers -----------------------------------------------------------
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,

@@ -28,6 +28,10 @@ class ServingStats:
     util_samples: list = field(default_factory=list)   # (t, busy_frac)
     breakdown: dict = field(default_factory=lambda: {
         "queue": 0.0, "compute": 0.0, "comm": 0.0, "load": 0.0})
+    # failure/recovery accounting (fault-injected serving)
+    counters: dict = field(default_factory=dict)       # kind -> count
+    recovery_times: list = field(default_factory=list)  # seconds per recovery
+    fault_log: list = field(default_factory=list)      # (t, kind, detail)
 
     def record(self, finish_t: float, latency: float, met_slo: bool,
                queue_s: float = 0.0, compute_s: float = 0.0,
@@ -39,6 +43,14 @@ class ServingStats:
         self.breakdown["compute"] += compute_s
         self.breakdown["comm"] += comm_s
         self.breakdown["load"] += load_s
+
+    def bump(self, kind: str, n: int = 1) -> None:
+        self.counters[kind] = self.counters.get(kind, 0) + n
+
+    def record_recovery(self, seconds: float, t: float = 0.0,
+                        kind: str = "recovery", detail: str = "") -> None:
+        self.recovery_times.append(seconds)
+        self.fault_log.append((t, kind, detail))
 
     # -- summaries ---------------------------------------------------------
     def latency_percentiles(self) -> dict:
@@ -72,14 +84,19 @@ class ServingStats:
         hi, lo = 1.5 * baseline, 1.2 * baseline
         episodes = []
         cur = None
-        # smooth over fixed windows
+        # smooth over fixed windows: windows are contiguous, so a single
+        # pointer sweep over the sorted list visits each entry once
         t_end = xs[-1][0]
         t = max(xs[0][0], start_after)
-        i = 0
+        j = 0
+        while j < len(xs) and xs[j][0] < t:
+            j += 1
         while t < t_end:
-            w = [l for ft, l in xs if t <= ft < t + window]
-            if w:
-                m = float(np.median(w))
+            k = j
+            while k < len(xs) and xs[k][0] < t + window:
+                k += 1
+            if k > j:
+                m = float(np.median([l for _, l in xs[j:k]]))
                 if cur is None and m > hi:
                     cur = {"start": t, "peak": m}
                 elif cur is not None:
@@ -89,6 +106,7 @@ class ServingStats:
                         cur["recovery_s"] = cur["end"] - cur["start"]
                         episodes.append(cur)
                         cur = None
+            j = k
             t += window
         return episodes
 
@@ -97,3 +115,24 @@ class ServingStats:
         if not eps:
             return 0.0
         return float(np.median([e["recovery_s"] for e in eps]))
+
+    # -- fault/availability summary ------------------------------------------
+    def availability(self, horizon: float, **kw) -> float:
+        """Fraction of the horizon NOT spent in a latency-stall episode
+        (the §9.3 stall machinery doubles as the downtime detector under
+        injected faults: a preempted pipeline shows up as a stall until
+        recovery brings latency back under 1.2x baseline)."""
+        if horizon <= 0:
+            return 1.0
+        down = sum(e["recovery_s"] for e in self.stall_episodes(**kw))
+        return max(1.0 - down / horizon, 0.0)
+
+    def fault_summary(self, horizon: float) -> dict:
+        rt = np.asarray(self.recovery_times, dtype=float)
+        return {
+            "counters": dict(self.counters),
+            "recoveries": int(rt.size),
+            "median_recovery_s": float(np.median(rt)) if rt.size else 0.0,
+            "max_recovery_s": float(rt.max()) if rt.size else 0.0,
+            "availability": self.availability(horizon),
+        }

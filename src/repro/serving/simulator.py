@@ -36,6 +36,8 @@ from repro.core.scaling import decide_scale_up
 from repro.core.affinity import AffinityScheduler, HostParamCache
 from repro.core.allocation import multiplexing_penalty
 from repro.serving.cluster import FragmentedCluster
+from repro.serving.faults import (COMM_TRANSIENT, OOM, PREEMPT_STAGE,
+                                  SLOWDOWN, FaultInjector)
 from repro.serving.metrics import ServingStats
 from repro.serving.workload import Request
 
@@ -115,6 +117,8 @@ class Instance:
     busy_until: float = 0.0
     last_used: float = 0.0
     busy_time: float = 0.0
+    slow_until: float = 0.0            # injected straggler window
+    slow_factor: float = 1.0
 
 
 class ClusterSim:
@@ -123,10 +127,13 @@ class ClusterSim:
     def __init__(self, policy: Policy, cluster: FragmentedCluster,
                  rng: np.random.Generator, *, model_scale: float = 1.0,
                  mem_per_stage: float = 15e9, slo: float = 10.0,
-                 peak_instances: int = 8):
+                 peak_instances: int = 8,
+                 fault_injector: FaultInjector | None = None):
         self.pol = policy
         self.cluster = cluster
         self.rng = rng
+        self.faults = fault_injector
+        self._backlog: list[Request] = []
         self.model_scale = model_scale
         self.mem_per_stage = mem_per_stage
         self.slo = slo
@@ -183,6 +190,81 @@ class ClusterSim:
         self.scale_events += 1
         return ready
 
+    def _spawn_emergency(self, now: float) -> float:
+        """FlexPipe recovery from a preempted instance: re-partition the
+        pipeline around whatever stage budget the fragmented cluster can
+        supply RIGHT NOW (coarser granularities need fewer free GPUs),
+        then warm-start from the host parameter cache — recovery is a
+        <10 ms inflight-refactor transition plus the warm load, not a
+        cold pipeline restart."""
+        prof0 = self._profile(now)
+        tried = []
+        S = prof0.stages if self.pol.pipeline else 1
+        while S >= 1:
+            if S not in tried:
+                tried.append(S)
+            gpus = self.cluster.find_gpus(S, self.mem_per_stage)
+            if gpus:
+                break
+            S = S // 2 if S > 1 else 0
+        if not gpus:
+            return self._spawn(now)         # fall back to the waiting path
+        self.cluster.allocate(gpus, self.mem_per_stage)
+        prof = table2_profile(S, self.model_scale)
+        load = prof.load_time
+        srv = str(gpus[0].server)
+        if self.host_cache.has(srv, "m", 0):
+            load *= 0.12                    # host-DRAM warm start
+        self.host_cache.put(srv, "m", 0, self.mem_per_stage, now)
+        ready = now + 0.009 + load          # inflight-refactor transition
+        inst = Instance(self._iid, S, prof, gpus, ready_at=ready,
+                        last_used=ready)
+        self._iid += 1
+        self.instances.append(inst)
+        self.scale_events += 1
+        return ready
+
+    def _handle_fault(self, ev, now: float) -> None:
+        """Map one injected FaultEvent onto the live topology."""
+        self.stats.bump("faults_injected")
+        self.stats.fault_log.append((now, ev.kind, ev.detail))
+        if not self.instances:
+            return
+        victim = self.instances[ev.stage % len(self.instances)]
+        if ev.kind in (PREEMPT_STAGE, OOM):
+            self.stats.bump("preemptions" if ev.kind == PREEMPT_STAGE
+                            else "oom_events")
+            # our allocation is evicted; queued requests survive host-side
+            self.cluster.preempt(victim.gpus, self.mem_per_stage)
+            requeued = list(victim.queue)
+            victim.queue = []
+            self.instances.remove(victim)
+            if requeued:
+                self.stats.bump("retries", len(requeued))
+                for r in requeued:
+                    r.attempts += 1
+                self._backlog.extend(requeued)
+            if self.pol.adaptive:
+                ready = self._spawn_emergency(now)
+                self.stats.bump("emergency_refactors")
+            else:
+                ready = self._spawn(now, warm_hint=False)
+                self.stats.bump("cold_restarts")
+            self.stats.record_recovery(max(ready - now, 0.0), t=now,
+                                       kind=ev.kind)
+        elif ev.kind == SLOWDOWN:
+            self.stats.bump("slowdowns")
+            victim.slow_until = now + ev.duration
+            victim.slow_factor = ev.factor
+            if self.pol.adaptive and victim.queue:
+                # Llumnix-style graceful migration off the straggler
+                self.stats.bump("graceful_migrations")
+                self._backlog.extend(victim.queue)
+                victim.queue = []
+        elif ev.kind == COMM_TRANSIENT:
+            self.stats.bump("comm_errors")
+            victim.busy_until = max(victim.busy_until, now) + 0.05
+
     def _reclaim(self, now: float) -> None:
         keep = max(int(self.peak_instances * self.pol.reserve_frac), 1)
         alive = [i for i in self.instances if not i.queue
@@ -213,7 +295,8 @@ class ClusterSim:
         i = 0
         now = 0.0
         next_ctl = 0.0
-        backlog: list[Request] = []
+        self._backlog = []
+        backlog = self._backlog
         recent_arrivals: list[float] = []
         cv_now = 1.0
         while now < horizon:
@@ -227,13 +310,18 @@ class ClusterSim:
             if len(recent_arrivals) > 400:
                 del recent_arrivals[:200]
 
+            # injected faults (preemption / OOM / slowdown / comm)
+            if self.faults is not None:
+                for ev in self.faults.poll(now):
+                    self._handle_fault(ev, now)
+
             # dispatch backlog to least-loaded ready instance (batched)
             ready = [x for x in self.instances if x.ready_at <= now]
             if ready and backlog:
                 for r in backlog:
                     inst = min(ready, key=lambda x: x.busy_until)
                     inst.queue.append(r)
-                backlog = []
+                del backlog[:]
 
             # service: iteration-based — each pipeline iteration carries up
             # to batch(S) requests and occupies the pipe for t_iter(S);
@@ -253,6 +341,10 @@ class ClusterSim:
                         # co-tenants contend for the shared GPU
                         interf = multiplexing_penalty(cv_now, gamma0=0.15)
                     service = t_iter * (1 + interf)
+                    if now < inst.slow_until:
+                        service *= inst.slow_factor
+                    elif inst.slow_factor != 1.0:
+                        inst.slow_factor = 1.0
                     finish = max(inst.busy_until, now) + service
                     inst.busy_time += service
                     inst.busy_until = finish
@@ -316,4 +408,5 @@ class ClusterSim:
             "alloc_wait_s": self.alloc_wait_total,
             "median_recovery_s": self.stats.median_recovery(),
             "breakdown": self.stats.mean_breakdown(),
+            "faults": self.stats.fault_summary(horizon_used),
         }

@@ -25,6 +25,12 @@ class Request:
     start: float = -1.0
     first_token: float = -1.0
     finish: float = -1.0
+    # fault-tolerance lifecycle (filled by FaultPolicy handling)
+    attempts: int = 0                   # aborted attempts so far
+    retry_at: float = 0.0               # earliest re-admission time (backoff)
+    degraded: bool = False              # served with a reduced token budget
+    failed: bool = False                # gave up after max_attempts
+    fail_reason: str = ""
 
     @property
     def latency(self) -> float:

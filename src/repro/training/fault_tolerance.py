@@ -78,6 +78,13 @@ class TrainSupervisor:
     failures_seen: int = 0
     restarts: int = 0
 
+    def _recover(self, restore_fn) -> tuple:
+        """Single recovery path for both detection modes (exception and
+        watchdog 'failed' verdict) — every failure is also a restart."""
+        self.failures_seen += 1
+        self.restarts += 1
+        return restore_fn()
+
     def run(self, *, n_steps: int, step_fn, state, save_fn, restore_fn,
             inject_fault_at: int | None = None) -> tuple:
         """Generic supervised loop. step_fn(state, step)->state;
@@ -91,14 +98,11 @@ class TrainSupervisor:
                     raise RuntimeError("injected node failure")
                 state = step_fn(state, step)
             except RuntimeError:
-                self.failures_seen += 1
-                self.restarts += 1
-                state, step = restore_fn()
+                state, step = self._recover(restore_fn)
                 continue
             verdict = self.watchdog.observe(time.perf_counter() - t0)
             if verdict == "failed":
-                self.failures_seen += 1
-                state, step = restore_fn()
+                state, step = self._recover(restore_fn)
                 continue
             step += 1
             if step % self.ckpt_every == 0 or step == n_steps:

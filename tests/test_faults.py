@@ -1,0 +1,447 @@
+"""Fault-injected serving: deterministic injection, detection, emergency
+KV-consistent recovery (Eq. 10 under failure), request retry/degradation,
+and simulator-level recovery vs cold restart."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.configs.base import get_arch
+from repro.core.refactoring import CacheSnapshot, merge_with_mask, snapshot
+from repro.models.kvcache import init_cache
+from repro.models.transformer import init_model
+from repro.serving import executor_cache as xc
+from repro.serving.cluster import FragmentedCluster
+from repro.serving.engine import EngineConfig, FlexPipeEngine
+from repro.serving.faults import (COMM_TRANSIENT, OOM, PREEMPT_STAGE,
+                                  SLOWDOWN, FaultEvent, FaultInjector,
+                                  FaultPolicy, StageHealthMonitor)
+from repro.serving.metrics import ServingStats
+from repro.serving.simulator import POLICIES, ClusterSim
+from repro.serving.workload import Request, synth_requests
+
+
+CFG = get_arch("qwen1.5-0.5b").smoke_config
+PARAMS = init_model(jax.random.PRNGKey(0), CFG)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector / FaultPolicy / StageHealthMonitor units
+# ---------------------------------------------------------------------------
+class TestFaultInjector:
+    def test_same_seed_same_schedule(self):
+        kw = dict(horizon=300.0, preempt_rate=0.02, oom_rate=0.01,
+                  comm_rate=0.05, slowdown_rate=0.01)
+        a = FaultInjector(seed=7, **kw)
+        b = FaultInjector(seed=7, **kw)
+        assert [(e.t, e.kind, e.stage) for e in a.events] == \
+               [(e.t, e.kind, e.stage) for e in b.events]
+        c = FaultInjector(seed=8, **kw)
+        assert [(e.t, e.kind) for e in a.events] != \
+               [(e.t, e.kind) for e in c.events]
+
+    def test_poll_delivers_in_order_once(self):
+        inj = FaultInjector.scripted([
+            FaultEvent(t=2.0, kind=OOM, stage=1),
+            FaultEvent(t=1.0, kind=PREEMPT_STAGE, stage=0),
+            FaultEvent(t=5.0, kind=SLOWDOWN, stage=2),
+        ])
+        assert [e.t for e in inj.events] == [1.0, 2.0, 5.0]
+        assert inj.poll(0.5) == []
+        got = inj.poll(2.0)
+        assert [e.kind for e in got] == [PREEMPT_STAGE, OOM]
+        assert inj.poll(2.0) == []                    # delivered exactly once
+        assert inj.pending() == 1
+        inj.reset()
+        assert inj.pending() == 3
+
+    def test_rates_scale_event_counts(self):
+        lo = FaultInjector(seed=0, horizon=1000.0, preempt_rate=0.001)
+        hi = FaultInjector(seed=0, horizon=1000.0, preempt_rate=0.1)
+        assert len(hi.events) > len(lo.events)
+        assert all(0 < e.t <= 1000.0 for e in hi.events)
+
+
+class TestFaultPolicy:
+    def test_backoff_is_capped_exponential(self):
+        pol = FaultPolicy(backoff_base_s=0.5, backoff_cap_s=8.0)
+        assert pol.backoff(1) == 0.5
+        assert pol.backoff(2) == 1.0
+        assert pol.backoff(3) == 2.0
+        assert pol.backoff(10) == 8.0                 # capped
+        assert pol.backoff(100) == 8.0                # no overflow blowup
+
+    def test_retry_and_degradation_schedule(self):
+        pol = FaultPolicy(max_attempts=3, degrade_frac=0.25)
+        assert pol.should_retry(1) and pol.should_retry(2)
+        assert not pol.should_retry(3)
+        assert pol.is_last_attempt(2) and not pol.is_last_attempt(1)
+        assert pol.degraded_budget(40) == 10
+        assert pol.degraded_budget(1) == 1            # never zero
+
+
+class TestStageHealthMonitor:
+    def test_missed_heartbeat_marks_stage_dead(self):
+        mon = StageHealthMonitor(heartbeat_timeout_s=0.5)
+        mon.reset(3, now=0.0)
+        mon.heartbeat(0, 1.0)
+        mon.heartbeat(2, 1.0)                         # stage 1 goes silent
+        assert mon.dead_stages(1.0) == [1]
+        mon.forget(1)
+        assert mon.dead_stages(1.0) == []
+
+    def test_straggler_needs_patience(self):
+        mon = StageHealthMonitor(straggler_factor=3.0, patience=3)
+        mon.reset(2)
+        for _ in range(10):
+            assert mon.observe_tick(0.1) == "ok"
+        assert mon.observe_tick(1.0) == "ok"
+        assert mon.observe_tick(1.0) == "ok"
+        assert mon.observe_tick(1.0) == "straggler"
+        assert mon.observe_tick(0.1) == "ok"          # streak resets
+
+
+# ---------------------------------------------------------------------------
+# Eq. 10 under failure: snapshot/merge property tests
+# ---------------------------------------------------------------------------
+def _rand_caches(cfg, rng, B=2, S=16):
+    cache = init_cache(cfg, B, S, jnp.float32)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.asarray(rng.normal(size=x.shape), x.dtype), cache)
+
+
+class TestEq10UnderFailure:
+    def test_attention_rows_bit_exact_per_slot(self):
+        rng = np.random.default_rng(0)
+        snap_c = _rand_caches(CFG, rng)
+        live_c = _rand_caches(CFG, rng)
+        valid = np.array([3, 7], np.int64)            # per-slot horizons
+        snap = CacheSnapshot(snap_c, valid)
+        merged = merge_with_mask(snap, live_c, live_len=10)
+        for li in range(CFG.n_layers):
+            for name in ("k", "v"):
+                m = np.asarray(merged[li]["mixer"][name])
+                s = np.asarray(snap_c[li]["mixer"][name])
+                l = np.asarray(live_c[li]["mixer"][name])
+                for b, v in enumerate(valid):
+                    np.testing.assert_array_equal(m[b, :, :v], s[b, :, :v])
+                    np.testing.assert_array_equal(m[b, :, v:], l[b, :, v:])
+
+    def test_state_caches_live_wins(self):
+        # RWKV per-slot state (wkv, sx_*) has no positional axis: an Eq. 10
+        # restore must keep the LIVE value (monolithic recurrent state can't
+        # be split at a token horizon) — replay rebuilds it instead.
+        cfg = get_arch("rwkv6-1.6b").smoke_config
+        rng = np.random.default_rng(1)
+        snap_c = _rand_caches(cfg, rng)
+        live_c = _rand_caches(cfg, rng)
+        merged = merge_with_mask(CacheSnapshot(snap_c, np.array([4, 4])),
+                                 live_c, live_len=8)
+        flat_m = jax.tree_util.tree_leaves(merged)
+        flat_l = jax.tree_util.tree_leaves(live_c)
+        for m, l in zip(flat_m, flat_l):
+            np.testing.assert_array_equal(np.asarray(m), np.asarray(l))
+
+    def test_snapshot_roundtrip_identity(self):
+        # valid == live everywhere -> merge restores the snapshot exactly
+        rng = np.random.default_rng(2)
+        snap_c = _rand_caches(CFG, rng)
+        live_c = _rand_caches(CFG, rng)
+        snap = snapshot(snap_c, np.array([16, 16], np.int64))
+        merged = merge_with_mask(CacheSnapshot(snap.per_layer, snap.valid_len),
+                                 live_c, live_len=16)
+        for m, s in zip(jax.tree_util.tree_leaves(merged),
+                        jax.tree_util.tree_leaves(snap.per_layer)):
+            np.testing.assert_array_equal(np.asarray(m), np.asarray(s))
+
+    @settings(max_examples=20, deadline=None)
+    @given(v0=st.integers(min_value=0, max_value=16),
+           v1=st.integers(min_value=0, max_value=16))
+    def test_merge_partitions_every_row(self, v0, v1):
+        # every (slot, position) cell comes from exactly one side of the
+        # validity horizon — no mixing, no dropped rows
+        rng = np.random.default_rng(v0 * 17 + v1)
+        snap_c = _rand_caches(CFG, rng)
+        live_c = _rand_caches(CFG, rng)
+        valid = np.array([v0, v1], np.int64)
+        merged = merge_with_mask(CacheSnapshot(snap_c, valid), live_c,
+                                 live_len=16)
+        k_m = np.asarray(merged[0]["mixer"]["k"])
+        k_s = np.asarray(snap_c[0]["mixer"]["k"])
+        k_l = np.asarray(live_c[0]["mixer"]["k"])
+        for b, v in enumerate(valid):
+            np.testing.assert_array_equal(k_m[b, :, :v], k_s[b, :, :v])
+            np.testing.assert_array_equal(k_m[b, :, v:], k_l[b, :, v:])
+
+
+# ---------------------------------------------------------------------------
+# Engine: preemption mid-decode -> emergency refactor -> bit-exact outputs
+# ---------------------------------------------------------------------------
+def _fault_run(fault_tick=None, *, steps=14, snapshot_interval=4,
+               warm=(1, 2), n=3, tokens=20, admit_late=None):
+    eng = FlexPipeEngine(CFG, PARAMS, [0, 2], EngineConfig(
+        max_batch=4, max_seq=64, warm_profiles=warm,
+        snapshot_interval=snapshot_interval))
+    for i in range(n):
+        eng.submit(Request(rid=i, arrival=0.0, prompt_len=12 + i,
+                           max_new_tokens=tokens))
+    eng._admit(0.0)
+    if fault_tick is not None:
+        eng.attach_faults(
+            injector=FaultInjector.scripted(
+                [FaultEvent(t=fault_tick * 0.1, kind=PREEMPT_STAGE,
+                            stage=1)]),
+            monitor=StageHealthMonitor())
+    hist = {}
+    for t in range(steps):
+        now = (t + 1) * 0.1
+        if admit_late is not None and t == admit_late:
+            eng.submit(Request(rid=90, arrival=now, prompt_len=9,
+                               max_new_tokens=tokens))
+            eng._admit(now)
+        eng.fault_step(now)
+        eng.decode_step(now)
+        for i, s in enumerate(eng.slots):
+            if s.generated:
+                hist[i] = list(s.generated)
+    return hist, eng
+
+
+class TestEnginePreemption:
+    def test_recovery_bit_identical_and_warm(self):
+        a, _ = _fault_run(None)
+        b, eng = _fault_run(fault_tick=11)
+        assert a == b                       # greedy outputs bit-identical
+        assert len(eng.recovery_events) == 1
+        rec = eng.recovery_events[0]
+        assert rec["kind"] == "emergency_refactor"
+        assert rec["stages_lost"] == [1]
+        assert rec["was_warm"] and rec["compile_cache_hit"]
+        assert rec["new_traces"] == 0       # zero-retrace recovery
+        assert 0 < rec["replayed_ticks"] <= 4   # delta <= snapshot interval
+        assert eng.stats.counters["preemptions"] == 1
+        assert eng.stats.counters["emergency_refactors"] == 1
+
+    def test_all_requests_complete_zero_lost_tokens(self):
+        _, eng = _fault_run(fault_tick=7, steps=30, tokens=10)
+        assert all(s.done for s in eng.slots)
+        assert eng.stats.completed == 3
+        assert not eng.failed_requests
+
+    def test_uncovered_slot_replays_full_history(self):
+        # a request admitted after the last snapshot has valid_len 0: its
+        # whole history re-prefills through replay, outputs unchanged
+        a, _ = _fault_run(None, steps=16, admit_late=9)
+        b, eng = _fault_run(fault_tick=11, steps=16, admit_late=9)
+        assert a == b
+        # the late slot's valid_len is 0, so its whole history (>= its
+        # 9-token prompt) went through replay; covered slots only replay
+        # their small post-snapshot delta
+        assert eng.recovery_events[0]["replayed_ticks"] >= 9
+
+    def test_without_snapshots_recovery_still_exact(self):
+        a, _ = _fault_run(None, snapshot_interval=0)
+        b, eng = _fault_run(fault_tick=11, snapshot_interval=0)
+        assert a == b
+        assert eng.recovery_events[0]["replayed_ticks"] >= 12
+
+    def test_detection_via_missed_heartbeat(self):
+        _, eng = _fault_run(fault_tick=5)
+        assert not eng._dead                     # cleared after recovery
+        assert eng.health.dead_stages(100.0) == [0]  # fresh epoch, old beats
+
+
+class TestStragglerMigration:
+    def test_graceful_migration_no_replay_bit_identical(self):
+        a, _ = _fault_run(None, tokens=10)
+        eng = FlexPipeEngine(CFG, PARAMS, [0, 2], EngineConfig(
+            max_batch=4, max_seq=64, warm_profiles=(1, 2),
+            snapshot_interval=4))
+        for i in range(3):
+            eng.submit(Request(rid=i, arrival=0.0, prompt_len=12 + i,
+                               max_new_tokens=10))
+        eng._admit(0.0)
+        eng.attach_faults(
+            injector=FaultInjector.scripted(
+                [FaultEvent(t=0.45, kind=SLOWDOWN, stage=1, factor=50.0,
+                            duration=30.0)]),
+            monitor=StageHealthMonitor(straggler_factor=3.0, patience=3))
+        hist = {}
+        for t in range(14):
+            now = (t + 1) * 0.1
+            eng.fault_step(now)
+            eng.decode_step(now)
+            eng.health_step(now, tick_wall_s=0.01)
+            for i, s in enumerate(eng.slots):
+                if s.generated:
+                    hist[i] = list(s.generated)
+        assert a == hist
+        migs = [r for r in eng.recovery_events
+                if r["kind"] == "graceful_migration"]
+        assert len(migs) == 1
+        assert migs[0]["replayed_ticks"] == 0    # KV moved, nothing replayed
+        assert migs[0]["new_traces"] == 0
+        assert eng.stats.counters["graceful_migrations"] == 1
+
+
+class TestRequestFaultPolicy:
+    def _engine(self, pol):
+        eng = FlexPipeEngine(CFG, PARAMS, [0, 2],
+                             EngineConfig(max_batch=2, max_seq=64))
+        eng.attach_faults(policy=pol)
+        return eng
+
+    def test_timeout_retries_with_backoff(self):
+        pol = FaultPolicy(timeout_s=0.2, max_attempts=3, backoff_base_s=0.5,
+                          degrade_last_attempt=False)
+        eng = self._engine(pol)
+        req = Request(rid=0, arrival=0.0, prompt_len=8, max_new_tokens=40)
+        eng.submit(req)
+        eng._admit(0.0)
+        eng._apply_fault_policy(1.0)             # exceeded attempt timeout
+        assert req.attempts == 1 and req in eng.queue
+        assert req.retry_at == pytest.approx(1.5)
+        eng._admit(1.2)                          # still backing off
+        assert req in eng.queue
+        eng._admit(2.0)                          # backoff elapsed
+        assert req not in eng.queue
+        assert eng.stats.counters["retries"] == 1
+
+    def test_last_attempt_degrades_budget(self):
+        pol = FaultPolicy(timeout_s=0.2, max_attempts=2, degrade_frac=0.5)
+        eng = self._engine(pol)
+        req = Request(rid=0, arrival=0.0, prompt_len=8, max_new_tokens=40)
+        eng.submit(req)
+        eng._admit(0.0)
+        eng._apply_fault_policy(1.0)
+        assert req.degraded and req.max_new_tokens == 20
+        assert eng.stats.counters["degraded"] == 1
+
+    def test_exhausted_attempts_fail_with_reason(self):
+        pol = FaultPolicy(timeout_s=0.1, max_attempts=1)
+        eng = self._engine(pol)
+        req = Request(rid=0, arrival=0.0, prompt_len=8, max_new_tokens=40)
+        eng.submit(req)
+        eng._admit(0.0)
+        eng._apply_fault_policy(5.0)
+        assert req.failed and "timeout" in req.fail_reason
+        assert eng.failed_requests == [req]
+        assert req not in eng.queue              # never silently requeued
+        assert eng.stats.counters["request_failures"] == 1
+
+    def test_run_completes_under_fault_policy(self):
+        eng = FlexPipeEngine(CFG, PARAMS, [0, 2],
+                             EngineConfig(max_batch=2, max_seq=64))
+        eng.attach_faults(policy=FaultPolicy(timeout_s=30.0))
+        reqs = [Request(rid=i, arrival=0.0, prompt_len=8, max_new_tokens=4)
+                for i in range(4)]
+        stats = eng.run(reqs, time_per_tick=0.05)
+        assert stats.completed == 4 and not eng.failed_requests
+
+
+# ---------------------------------------------------------------------------
+# Simulator: policy-dependent recovery + seeded reproducibility
+# ---------------------------------------------------------------------------
+def _sim_run(policy, *, fault_seed, preempt_rate=1 / 20.0, duration=60.0):
+    rng = np.random.default_rng(0)
+    reqs = synth_requests(rng, rate=20.0, cv=2.0, duration=duration,
+                          deadline_s=4.0)
+    inj = FaultInjector(seed=fault_seed, horizon=duration,
+                        preempt_rate=preempt_rate)
+    sim = ClusterSim(copy.deepcopy(POLICIES[policy]),
+                     FragmentedCluster.synth(seed=1),
+                     np.random.default_rng(2), slo=4.0, peak_instances=4,
+                     fault_injector=inj)
+    out = sim.run(reqs)
+    out["counters"] = dict(sim.stats.counters)
+    out["recoveries"] = list(sim.stats.recovery_times)
+    return out
+
+
+class TestSimulatorFaults:
+    def test_flexpipe_refactors_baseline_cold_restarts(self):
+        flex = _sim_run("flexpipe", fault_seed=7)
+        cold = _sim_run("alpaserve", fault_seed=7)
+        assert flex["counters"]["preemptions"] >= 1
+        assert flex["counters"]["emergency_refactors"] == \
+            flex["counters"]["preemptions"]
+        assert "cold_restarts" not in flex["counters"]
+        assert cold["counters"]["cold_restarts"] == \
+            cold["counters"]["preemptions"]
+        assert np.median(flex["recoveries"]) < np.median(cold["recoveries"])
+
+    def test_same_fault_seed_reproducible(self):
+        a = _sim_run("flexpipe", fault_seed=3)
+        b = _sim_run("flexpipe", fault_seed=3)
+        a.pop("stats", None), b.pop("stats", None)
+        assert repr(a) == repr(b)
+
+    def test_cluster_synth_seed_contract(self):
+        a = FragmentedCluster.synth(seed=5)
+        b = FragmentedCluster.synth(seed=5)
+        c = FragmentedCluster.synth(seed=6)
+        free_a = [g.free_mem for s in a.servers for g in s.gpus]
+        free_b = [g.free_mem for s in b.servers for g in s.gpus]
+        free_c = [g.free_mem for s in c.servers for g in s.gpus]
+        assert free_a == free_b and free_a != free_c
+
+
+# ---------------------------------------------------------------------------
+# Metrics: stall-episode sweep + availability accounting
+# ---------------------------------------------------------------------------
+def _stats_with_bursts(bursts, *, t_end=260.0):
+    """Latency trace: 1.0s baseline with 4x spikes inside each burst."""
+    stats = ServingStats()
+    samples = [(float(t), 1.0) for t in np.arange(0.0, t_end, 0.5)]
+    for lo, hi in bursts:
+        samples += [(float(t), 4.0) for t in np.arange(lo, hi, 0.25)]
+    return stats, samples
+
+
+class TestFaultMetrics:
+    def test_stall_episode_sweep_finds_separated_bursts(self):
+        stats, samples = _stats_with_bursts([(100.0, 106.0), (200.0, 203.0)])
+        for t, lat in samples:
+            stats.record(t, lat, met_slo=True)
+        eps = stats.stall_episodes(window=1.0)
+        assert len(eps) == 2
+        assert eps[0]["start"] == pytest.approx(100.0, abs=1.0)
+        assert eps[0]["recovery_s"] >= 6.0
+        assert eps[1]["start"] == pytest.approx(200.0, abs=1.0)
+
+    def test_stall_episode_sweep_order_independent(self):
+        stats, samples = _stats_with_bursts([(100.0, 106.0), (200.0, 203.0)])
+        rng = np.random.default_rng(0)
+        for i in rng.permutation(len(samples)):
+            t, lat = samples[i]
+            stats.record(t, lat, met_slo=True)
+        sorted_stats, _ = _stats_with_bursts([])
+        for t, lat in samples:
+            sorted_stats.record(t, lat, met_slo=True)
+        assert stats.stall_episodes(window=1.0) == \
+            sorted_stats.stall_episodes(window=1.0)
+
+    def test_availability_counts_stall_downtime(self):
+        stats, samples = _stats_with_bursts([(100.0, 110.0)])
+        for t, lat in samples:
+            stats.record(t, lat, met_slo=True)
+        eps = stats.stall_episodes()
+        down = sum(e["recovery_s"] for e in eps)
+        assert down > 0
+        assert stats.availability(260.0) == pytest.approx(1.0 - down / 260.0)
+
+    def test_fault_summary_aggregates(self):
+        stats = ServingStats()
+        stats.bump("preemptions")
+        stats.bump("preemptions")
+        stats.record_recovery(5.0, t=10.0, kind="emergency_refactor")
+        stats.record_recovery(15.0, t=50.0, kind="cold_restart")
+        s = stats.fault_summary(horizon=100.0)
+        assert s["counters"]["preemptions"] == 2
+        assert s["recoveries"] == 2
+        assert s["median_recovery_s"] == pytest.approx(10.0)
+        assert s["max_recovery_s"] == pytest.approx(15.0)
+        assert s["availability"] == 1.0     # no latency trace -> no stalls

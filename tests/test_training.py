@@ -2,6 +2,7 @@
 fault-tolerant supervisor, data pipeline determinism."""
 import os
 import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
@@ -118,6 +119,33 @@ class TestFaultTolerance:
                                   inject_fault_at=12)
             assert step == 20 and sup.restarts == 1
             assert state == 20                      # replay is exact
+
+    def test_supervisor_counts_watchdog_timeout_as_restart(self):
+        # The watchdog 'failed' verdict (collective timeout, no exception)
+        # must go through the same recovery accounting as a raised fault.
+        with tempfile.TemporaryDirectory() as d:
+            sup = TrainSupervisor(ckpt_dir=d, ckpt_every=5,
+                                  watchdog=StepWatchdog(timeout_s=0.05))
+            hung = [True]
+
+            def step_fn(state, step):
+                if step == 7 and hung[0]:
+                    hung[0] = False
+                    time.sleep(0.06)        # exceeds timeout_s -> 'failed'
+                return state + 1
+
+            def save(state, step):
+                ckpt.save(d, {"s": jnp.asarray(state)}, step=step)
+
+            def restore():
+                out, step, _ = ckpt.restore(d, {"s": jnp.asarray(0)})
+                return int(out["s"]), step
+
+            save(0, 0)
+            state, step = sup.run(n_steps=10, step_fn=step_fn, state=0,
+                                  save_fn=save, restore_fn=restore)
+            assert step == 10 and state == 10
+            assert sup.failures_seen == 1 and sup.restarts == 1
 
     def test_watchdog_flags_stragglers(self):
         w = StepWatchdog(straggler_factor=2.0, patience=3)
