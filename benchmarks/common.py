@@ -17,17 +17,26 @@ def run_policy(name: str, *, cv: float, rate: float = 20.0,
                deadline_s: float | None = None, cluster_seed: int = 1,
                service_seed: int = 2, fault_seed: int = 0,
                preempt_rate: float = 0.0, oom_rate: float = 0.0,
-               comm_rate: float = 0.0, slowdown_rate: float = 0.0):
+               comm_rate: float = 0.0, slowdown_rate: float = 0.0,
+               priority_mix: tuple | None = None,
+               policy_overrides: dict | None = None):
     """One policy run with every RNG seeded explicitly — injected-fault
     runs are byte-reproducible from (seed, cluster_seed, service_seed,
-    fault_seed) alone (the ``--fault-seed`` CLI contract)."""
+    fault_seed) alone (the ``--fault-seed`` CLI contract).
+
+    ``policy_overrides`` sets Policy fields on a copy (e.g. the
+    admission/shedding/brownout knobs for overload sweeps)."""
     rng = np.random.default_rng(seed)
     reqs = synth_requests(rng, rate=rate, cv=cv, duration=duration,
-                          deadline_s=deadline_s or slo)
+                          deadline_s=deadline_s or slo,
+                          priority_mix=priority_mix)
     pol = copy.deepcopy(POLICIES[name])
     if static_stages is not None:
         pol.static_stages = static_stages
         pol.adaptive = False
+    for k, v in (policy_overrides or {}).items():
+        assert hasattr(pol, k), f"unknown Policy field {k!r}"
+        setattr(pol, k, v)
     injector = None
     if preempt_rate or oom_rate or comm_rate or slowdown_rate:
         injector = FaultInjector(seed=fault_seed, horizon=duration,

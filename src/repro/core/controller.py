@@ -57,9 +57,14 @@ class FlexPipeController:
     def on_request(self, t: float) -> None:
         self.refactor.record_arrival(t)
 
-    def control_step(self, now: float, queue_len: float):
-        """One Alg. 1 iteration; returns (decision, migration|None)."""
-        d = self.refactor.step(now, queue_len)
+    def control_step(self, now: float, queue_len: float,
+                     saturation: float = 0.0):
+        """One Alg. 1 iteration; returns (decision, migration|None).
+
+        ``saturation`` is the admission queue's overload signal
+        (serving/admission.py): it biases granularity selection toward
+        deeper pipelines so refactoring and load shedding compose."""
+        d = self.refactor.step(now, queue_len, saturation=saturation)
         mig = None
         if d.changed and len(self.partitions) >= 2:
             old_s = self.refactor.history[-2][1] if len(

@@ -152,13 +152,15 @@ class RefactoringController:
 
     def __init__(self, profiles: list[GranularityProfile], *,
                  alpha: float = 0.5, sigma: float = 1.0,
-                 switch_margin: float = 0.05, cooldown_s: float = 10.0):
+                 switch_margin: float = 0.05, cooldown_s: float = 10.0,
+                 saturation_gain: float = 1.0):
         assert profiles, "need at least one granularity profile"
         self.profiles = profiles
         self.alpha = alpha
         self.sigma = sigma
         self.switch_margin = switch_margin
         self.cooldown_s = cooldown_s
+        self.saturation_gain = saturation_gain
         self.monitor = CVMonitor()
         self.current = profiles[0]
         self._last_switch = -math.inf
@@ -167,7 +169,8 @@ class RefactoringController:
     def record_arrival(self, t: float) -> None:
         self.monitor.record(t)
 
-    def step(self, now: float, queue_len: float = 0.0) -> RefactorDecision:
+    def step(self, now: float, queue_len: float = 0.0,
+             saturation: float = 0.0) -> RefactorDecision:
         import time as _time
         t0 = _time.perf_counter()
         est = self.monitor.estimate(now)
@@ -175,6 +178,16 @@ class RefactoringController:
         # proactive: extrapolate CV half a window ahead using the intensity
         # gradient sign (paper: "anticipate traffic shifts")
         cv_eff = est.cv * (1.15 if vel > 0 else 1.0)
+        # overload composition: the admission queue's saturation signal
+        # blends cv_eff toward the most burst-tuned profile's cv_opt, so
+        # sustained pressure (which can be LOW-CV — a steady flood) still
+        # steers selection toward deeper, higher-throughput pipelines and
+        # refactoring composes with load shedding instead of fighting it:
+        # shedding buys headroom, the deeper pipeline converts it to goodput
+        sat = min(max(saturation * self.saturation_gain, 0.0), 1.0)
+        if sat > 0.0:
+            cv_hi = max(p.cv_opt for p in self.profiles)
+            cv_eff += sat * max(cv_hi - cv_eff, 0.0)
         best = select(self.profiles, cv_eff, alpha=self.alpha,
                       sigma=self.sigma)
         changed = False
@@ -196,4 +209,4 @@ class RefactoringController:
         return RefactorDecision(
             target=self.current, changed=changed, score_s=dt,
             reason=f"cv={est.cv:.2f} vel={vel:+.2f} q={queue_len:.0f} "
-                   f"-> S={self.current.stages}")
+                   f"sat={sat:.2f} -> S={self.current.stages}")

@@ -15,10 +15,11 @@ from repro.configs.base import get_arch
 from repro.core.controller import FlexPipeController
 from repro.core.granularity import GranularityProfile
 from repro.models.transformer import init_model
+from repro.serving.admission import AdmissionConfig
 from repro.serving.engine import EngineConfig, FlexPipeEngine
 from repro.serving.faults import (FaultInjector, FaultPolicy,
                                   StageHealthMonitor)
-from repro.serving.workload import synth_requests
+from repro.serving.workload import audit_requests, synth_requests
 
 
 def main() -> None:
@@ -35,6 +36,26 @@ def main() -> None:
                     help="stage preemptions per second of sim time")
     ap.add_argument("--slowdown-rate", type=float, default=0.0)
     ap.add_argument("--request-timeout", type=float, default=30.0)
+    # overload protection (serving/admission.py); --admission-depth arms it
+    ap.add_argument("--admission-depth", type=int, default=0,
+                    help="bounded admission queue depth (0 = legacy "
+                         "unbounded FIFO, admission control off)")
+    ap.add_argument("--no-edf", action="store_true",
+                    help="disable earliest-deadline-first admission")
+    ap.add_argument("--no-shed", action="store_true",
+                    help="disable deadline-based load shedding")
+    ap.add_argument("--no-brownout", action="store_true",
+                    help="disable brownout budget degradation")
+    ap.add_argument("--kv-high", type=float, default=0.90,
+                    help="KV watermark: pause admission above this "
+                         "slot-row occupancy fraction")
+    ap.add_argument("--kv-low", type=float, default=0.75,
+                    help="KV watermark: resume admission below this")
+    ap.add_argument("--deadline", type=float, default=10.0,
+                    help="per-request SLO budget (seconds from arrival)")
+    ap.add_argument("--priority-mix", default=None,
+                    help="comma probabilities for interactive,standard,"
+                         "batch classes (e.g. 0.2,0.6,0.2)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -48,6 +69,13 @@ def main() -> None:
                            latency=0.6, cv_opt=2.5),
     ]
     controller = FlexPipeController(cfg, profiles)
+    admission = None
+    if args.admission_depth > 0:
+        admission = AdmissionConfig(
+            max_queue_depth=args.admission_depth,
+            edf=not args.no_edf, shed=not args.no_shed,
+            brownout=not args.no_brownout,
+            kv_high_watermark=args.kv_high, kv_low_watermark=args.kv_low)
     eng = FlexPipeEngine(cfg, params,
                          boundaries=[i * 4 for i in range(max(n // 4, 1))],
                          ecfg=EngineConfig(
@@ -56,7 +84,8 @@ def main() -> None:
                              # can pick: refactors then never stall on XLA
                              warm_profiles=tuple(p.stages for p in profiles),
                              # bound post-preemption replay to 8 ticks
-                             snapshot_interval=8))
+                             snapshot_interval=8,
+                             admission=admission))
     if args.preempt_rate or args.slowdown_rate:
         eng.attach_faults(
             injector=FaultInjector(seed=args.fault_seed,
@@ -66,15 +95,27 @@ def main() -> None:
             policy=FaultPolicy(timeout_s=args.request_timeout),
             monitor=StageHealthMonitor())
     rng = np.random.default_rng(0)
+    mix = tuple(float(x) for x in args.priority_mix.split(",")) \
+        if args.priority_mix else None
     reqs = synth_requests(rng, rate=args.rate, cv=args.cv,
                           duration=args.duration, prompt_mean=24,
-                          decode_mean=8)
+                          decode_mean=8, deadline_s=args.deadline,
+                          priority_mix=mix)
     print(f"{cfg.name}: serving {len(reqs)} requests "
           f"(rate={args.rate}, cv={args.cv})")
     stats = eng.run(reqs, controller=controller)
     lat = stats.latency_percentiles()
     print(f"completed={stats.completed} p50={lat['p50']:.2f}s "
           f"p99={lat['p99']:.2f}s refactors={len(eng.refactor_events)}")
+    if eng.admission is not None:
+        o = stats.overload_summary()
+        counts, violations = audit_requests(reqs)
+        print(f"admission: rejected={o['rejected']} shed={o['shed']} "
+              f"brownout_degraded={o['brownout_degraded']} "
+              f"ttft_p99={o['ttft']['p99']:.2f}s "
+              f"saturation_mean={o['saturation']['mean']:.2f}")
+        print(f"accounting={counts} violations={len(violations)} "
+              f"goodput={stats.slo_met / max(args.duration, 1e-9):.2f}/s")
     if eng.faults is not None:
         s = stats.fault_summary(args.duration)
         print(f"faults={s['counters']} recoveries={s['recoveries']} "

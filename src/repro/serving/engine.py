@@ -55,6 +55,8 @@ from repro.configs.base import ModelConfig
 from repro.core.refactoring import CacheSnapshot, merge_with_mask, snapshot
 from repro.models.kvcache import group_by_stage, init_cache
 from repro.models.model import embed_tokens, lm_head
+from repro.serving.admission import (ADMITTED, REJECTED, AdmissionConfig,
+                                     AdmissionQueue, CostModel)
 from repro.serving.executor_cache import ExecutorCache, trace_count
 from repro.serving.faults import (COMM_TRANSIENT, OOM, PREEMPT_STAGE,
                                   SLOWDOWN)
@@ -93,6 +95,10 @@ class EngineConfig:
     # to a host-side CacheSnapshot, bounding the replay delta after a
     # stage preemption to at most `snapshot_interval` ticks
     snapshot_interval: int = 0
+    # overload protection (serving/admission.py): None keeps the legacy
+    # unbounded FIFO; an AdmissionConfig arms bounded admission, EDF
+    # ordering, deadline shedding, KV watermarks, and brownout degradation
+    admission: Optional[AdmissionConfig] = None
 
 
 @dataclass
@@ -120,7 +126,16 @@ class FlexPipeEngine:
         self.caches = init_cache(cfg, self.ecfg.max_batch, self.ecfg.max_seq,
                                  self.cache_dtype)
         self.slots = [Slot() for _ in range(self.ecfg.max_batch)]
-        self.queue: list[Request] = []
+        # overload protection: with an AdmissionConfig the queue IS the
+        # bounded EDF AdmissionQueue (list-compatible for len/append);
+        # without one it stays the legacy unbounded FIFO list
+        self.admission: Optional[AdmissionQueue] = None
+        if self.ecfg.admission is not None:
+            self.admission = AdmissionQueue(self.ecfg.admission,
+                                            stats=self.stats)
+            self.queue = self.admission
+        else:
+            self.queue: list[Request] = []
         self.executors = ExecutorCache(
             cfg, params, max_batch=self.ecfg.max_batch,
             max_seq=self.ecfg.max_seq, cache_dtype=self.cache_dtype,
@@ -515,9 +530,12 @@ class FlexPipeEngine:
             s.generated = []
             s.pos = 0
             req.attempts += 1
+            self.stats.bump("timeouts")
             if pol.should_retry(req.attempts):
                 self.stats.bump("retries")
                 req.retry_at = now + pol.backoff(req.attempts)
+                # per-attempt queue accounting restarts at the requeue
+                req.enqueued_at = now
                 if pol.degrade_last_attempt \
                         and pol.is_last_attempt(req.attempts):
                     req.max_new_tokens = pol.degraded_budget(
@@ -532,20 +550,57 @@ class FlexPipeEngine:
                 self.failed_requests.append(req)
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, now: Optional[float] = None) -> str:
+        """Enqueue a request.  With admission control armed this is the
+        bounded fast-fail point: a full queue rejects immediately (the
+        503 path — no prefill work is ever spent on a rejected request)."""
+        t = req.arrival if now is None else now
+        if self.admission is not None:
+            return self.admission.submit(req, t)
+        req.enqueued_at = t
         self.queue.append(req)
+        return ADMITTED
+
+    @property
+    def rejected_requests(self) -> list[Request]:
+        return self.admission.rejected if self.admission is not None else []
+
+    @property
+    def shed_requests(self) -> list[Request]:
+        return self.admission.shed if self.admission is not None else []
+
+    def kv_used_frac(self) -> float:
+        """Fraction of cache slot rows committed by active requests — the
+        quantity the admission watermarks gate on."""
+        used = sum(s.pos for s in self.slots if not s.done)
+        return used / float(self.ecfg.max_batch * self.ecfg.max_seq)
 
     def _admit(self, now: float) -> None:
         for slot_id, slot in enumerate(self.slots):
-            if not slot.done or not self.queue:
+            if not slot.done or not len(self.queue):
                 continue
-            # retried requests wait out their backoff before re-admission
-            j = next((k for k, r in enumerate(self.queue)
-                      if r.retry_at <= now), None)
-            if j is None:
-                break
-            req = self.queue.pop(j)
+            if self.admission is not None:
+                req = self.admission.pop_admissible(now, self.kv_used_frac())
+                if req is None:
+                    break
+                # brownout: shrink the token budget by priority class
+                f = self.admission.budget_factor(req.priority)
+                if f < 1.0:
+                    req.max_new_tokens = max(int(req.max_new_tokens * f), 1)
+                    req.degraded = True
+                    self.stats.bump("brownout_degraded")
+            else:
+                # retried requests wait out their backoff before re-admission
+                j = next((k for k, r in enumerate(self.queue)
+                          if r.retry_at <= now), None)
+                if j is None:
+                    break
+                req = self.queue.pop(j)
             req.start = now
+            # per-attempt queue wait: measured from THIS attempt's enqueue
+            # time, never spanning earlier failed attempts
+            since = req.enqueued_at if req.enqueued_at >= 0 else req.arrival
+            req.queue_wait = max(now - since, 0.0)
             self._prefill_into_slot(slot_id, req, now)
 
     def _prefill_into_slot(self, slot_id: int, req: Request,
@@ -580,6 +635,7 @@ class FlexPipeEngine:
         slot.prompt = prompt.astype(np.int64)
         slot.budget = budget
         first = int(np.asarray(out)[0])              # first sampled token
+        req.first_token = now                        # TTFT: prefill emits it
         slot.generated = [first]
         slot.done = False
         eos = self.ecfg.eos_token
@@ -588,7 +644,8 @@ class FlexPipeEngine:
             # rather than letting the next tick overshoot max_new_tokens
             req.finish = now
             self.stats.record(now, req.latency, req.met_slo,
-                              queue_s=max(req.start - req.arrival, 0.0))
+                              queue_s=req.queue_wait,
+                              ttft_s=req.first_token - req.arrival)
             slot.done = True
             slot.request = None
 
@@ -632,7 +689,8 @@ class FlexPipeEngine:
             req = s.request
             req.finish = now
             self.stats.record(now, req.latency, req.met_slo,
-                              queue_s=max(req.start - req.arrival, 0.0))
+                              queue_s=req.queue_wait,
+                              ttft_s=req.first_token - req.arrival)
             s.done = True
             s.request = None
         self._maybe_snapshot()
@@ -658,17 +716,26 @@ class FlexPipeEngine:
             time_per_tick: float = 0.05) -> ServingStats:
         """Trace-driven loop in simulated time; controller may refactor."""
         pending = sorted(requests, key=lambda r: r.arrival)
+        if self.admission is not None and self.admission.cost.auto:
+            # sim-time serving: a prefill costs one admission tick and
+            # decode one tick per token — seed the shedding cost model
+            self.admission.cost.seed_from_tick(time_per_tick)
         now = 0.0
         last_ctl = 0.0
         i = 0
-        while i < len(pending) or self.queue or \
+        while i < len(pending) or len(self.queue) or \
                 any(not s.done for s in self.slots):
             while i < len(pending) and pending[i].arrival <= now:
-                self.submit(pending[i])
+                self.submit(pending[i], now=pending[i].arrival)
                 if controller is not None:
                     controller.on_request(pending[i].arrival)
                 i += 1
             self._apply_fault_policy(now)
+            if self.admission is not None:
+                # shed already-dead queued work even while slots are full,
+                # then advance the brownout controller on saturation
+                self.admission.expire(now)
+                self.admission.update(now)
             self._admit(now)
             self.fault_step(now)
             t_tick = time.perf_counter()
@@ -676,12 +743,18 @@ class FlexPipeEngine:
             self.health_step(now, time.perf_counter() - t_tick)
             if controller is not None and now - last_ctl >= self.ecfg.control_interval:
                 last_ctl = now
-                d, _ = controller.control_step(now, len(self.queue))
+                sat = self.admission.saturation() \
+                    if self.admission is not None else 0.0
+                d, _ = controller.control_step(now, len(self.queue),
+                                               saturation=sat)
                 if d.changed and d.target.stages <= self.cfg.n_layers:
                     nb = self._boundaries_for(d.target.stages)
                     if nb != self.boundaries:
                         self.refactor(nb)
             self.stats.queue_samples.append((now, len(self.queue)))
+            if self.admission is not None:
+                self.stats.record_saturation(now,
+                                             self.admission.saturation())
             now += time_per_tick
         return self.stats
 

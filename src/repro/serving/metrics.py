@@ -32,10 +32,14 @@ class ServingStats:
     counters: dict = field(default_factory=dict)       # kind -> count
     recovery_times: list = field(default_factory=list)  # seconds per recovery
     fault_log: list = field(default_factory=list)      # (t, kind, detail)
+    # overload accounting (serving/admission.py)
+    ttfts: list = field(default_factory=list)          # time-to-first-token
+    saturation_samples: list = field(default_factory=list)  # (t, sat 0..1)
 
     def record(self, finish_t: float, latency: float, met_slo: bool,
                queue_s: float = 0.0, compute_s: float = 0.0,
-               comm_s: float = 0.0, load_s: float = 0.0) -> None:
+               comm_s: float = 0.0, load_s: float = 0.0,
+               ttft_s: float | None = None) -> None:
         self.latencies.append((finish_t, latency))
         self.completed += 1
         self.slo_met += int(met_slo)
@@ -43,6 +47,8 @@ class ServingStats:
         self.breakdown["compute"] += compute_s
         self.breakdown["comm"] += comm_s
         self.breakdown["load"] += load_s
+        if ttft_s is not None and ttft_s >= 0:
+            self.ttfts.append(ttft_s)
 
     def bump(self, kind: str, n: int = 1) -> None:
         self.counters[kind] = self.counters.get(kind, 0) + n
@@ -55,6 +61,36 @@ class ServingStats:
     # -- summaries ---------------------------------------------------------
     def latency_percentiles(self) -> dict:
         return percentiles([l for _, l in self.latencies])
+
+    def ttft_percentiles(self) -> dict:
+        return percentiles(self.ttfts)
+
+    def record_saturation(self, t: float, sat: float) -> None:
+        self.saturation_samples.append((t, sat))
+
+    def saturation_summary(self) -> dict:
+        if not self.saturation_samples:
+            return {"mean": 0.0, "max": 0.0}
+        xs = [s for _, s in self.saturation_samples]
+        return {"mean": float(np.mean(xs)), "max": float(np.max(xs))}
+
+    def overload_summary(self) -> dict:
+        """Admission/shedding/brownout accounting in one view."""
+        c = self.counters
+        return {
+            "completed": self.completed,
+            "slo_met": self.slo_met,
+            "rejected": c.get("rejected", 0),
+            "shed": c.get("shed", 0),
+            "shed_deadline_expired": c.get("shed_deadline_expired", 0),
+            "shed_infeasible": c.get("shed_infeasible", 0),
+            "shed_brownout": c.get("shed_brownout", 0),
+            "brownout_degraded": c.get("brownout_degraded", 0),
+            "timeouts": c.get("timeouts", 0),
+            "kv_gate_trips": c.get("kv_gate_trips", 0),
+            "ttft": self.ttft_percentiles(),
+            "saturation": self.saturation_summary(),
+        }
 
     def goodput(self, horizon: float) -> float:
         """SLO-satisfying completions per second."""

@@ -35,11 +35,12 @@ from repro.core.refactoring import RefactoringController
 from repro.core.scaling import decide_scale_up
 from repro.core.affinity import AffinityScheduler, HostParamCache
 from repro.core.allocation import multiplexing_penalty
+from repro.serving.admission import AdmissionConfig, BrownoutController
 from repro.serving.cluster import FragmentedCluster
 from repro.serving.faults import (COMM_TRANSIENT, OOM, PREEMPT_STAGE,
                                   SLOWDOWN, FaultInjector)
 from repro.serving.metrics import ServingStats
-from repro.serving.workload import Request
+from repro.serving.workload import Request, audit_requests
 
 
 # Table 2 anchors (OPT-66B, A100, seq 4096)
@@ -89,11 +90,23 @@ class Policy:
     pipeline: bool = True              # Tetris: False (single-GPU replicas)
     scale_out_queue: int = 32          # queue length triggering scale-up
     reclaim_after: float = 300.0       # idle reclamation window (5 min)
+    # overload protection (serving/admission.py knobs mirrored so the
+    # simulator can compare static vs adaptive overload behavior; all off
+    # by default = legacy unbounded FIFO)
+    admission_depth: int = 0           # bounded queue; 0 = unbounded
+    edf: bool = False                  # earliest-deadline-first dispatch
+    shedding: bool = False             # deadline-based load shedding
+    brownout: bool = False             # degrade token budgets under pressure
 
 
 FLEXPIPE = Policy("flexpipe", adaptive=True, reserve_frac=0.30,
                   warm_start=True, stage_level_scaling=True,
                   scale_out_queue=6)
+FLEXPIPE_OVERLOAD = Policy("flexpipe-overload", adaptive=True,
+                           reserve_frac=0.30, warm_start=True,
+                           stage_level_scaling=True, scale_out_queue=6,
+                           admission_depth=256, edf=True, shedding=True,
+                           brownout=True)
 ALPASERVE = Policy("alpaserve", static_stages=4, reserve_frac=0.75)
 SERVERLESSLLM = Policy("serverlessllm", static_stages=8, reserve_frac=0.60,
                        warm_start=True)
@@ -103,7 +116,8 @@ TETRIS = Policy("tetris", static_stages=1, reserve_frac=0.60, pipeline=False,
                 warm_start=True, multiplex=True)  # tensor-sharing couples tenants
 
 POLICIES = {p.name: p for p in
-            (FLEXPIPE, ALPASERVE, SERVERLESSLLM, MUXSERVE, TETRIS)}
+            (FLEXPIPE, FLEXPIPE_OVERLOAD, ALPASERVE, SERVERLESSLLM,
+             MUXSERVE, TETRIS)}
 
 
 @dataclass
@@ -149,6 +163,12 @@ class ClusterSim:
         self.refactor_count = 0
         self.scale_events = 0
         self.alloc_wait_total = 0.0
+        # overload protection (mirrors serving/admission.py for the engine)
+        self.rejected: list[Request] = []
+        self.shed: list[Request] = []
+        self.brownout = BrownoutController(AdmissionConfig()) \
+            if policy.brownout else None
+        self._saturation = 0.0
         if policy.warm_start:
             # pre-deployment: stage params staged into host DRAM on a few
             # servers (the paper's parameter-locality preservation)
@@ -243,6 +263,7 @@ class ClusterSim:
                 self.stats.bump("retries", len(requeued))
                 for r in requeued:
                     r.attempts += 1
+                    r.enqueued_at = now      # per-attempt queue accounting
                 self._backlog.extend(requeued)
             if self.pol.adaptive:
                 ready = self._spawn_emergency(now)
@@ -264,6 +285,36 @@ class ClusterSim:
         elif ev.kind == COMM_TRANSIENT:
             self.stats.bump("comm_errors")
             victim.busy_until = max(victim.busy_until, now) + 0.05
+
+    # -- overload protection (mirrors serving/admission.py) ------------
+    def _queued_total(self) -> int:
+        return len(self._backlog) + sum(len(x.queue) for x in self.instances)
+
+    def _shed_req(self, r: Request, reason: str) -> None:
+        r.shed = True
+        r.shed_reason = reason
+        self.shed.append(r)
+        self.stats.bump("shed")
+        self.stats.bump(f"shed_{reason}")
+
+    @staticmethod
+    def _iter_times(prof: GranularityProfile) -> tuple[float, float]:
+        """(t_iter, fill) under the same calibration the service loop
+        uses (t_c derived from profile latency)."""
+        S = prof.stages
+        comp = (prof.latency - prof.comm_ms * 1e-3) / (2 * S - 1) \
+            if prof.latency else 0.0
+        return S * comp + prof.comm_ms * 1e-3, (S - 1) * comp
+
+    def _feasible(self, r: Request, inst: Instance, now: float) -> bool:
+        """Can this instance still deliver r inside its deadline?  The
+        estimate charges the queue already ahead of r plus r's own
+        iteration and pipeline fill (the sim-side prefill+decode cost)."""
+        t_iter, fill = self._iter_times(inst.profile)
+        iters_ahead = -(-len(inst.queue) // max(inst.profile.batch, 1))
+        est_finish = max(inst.busy_until, now) \
+            + (iters_ahead + 1) * t_iter + fill
+        return est_finish <= r.arrival + r.deadline_s
 
     def _reclaim(self, now: float) -> None:
         keep = max(int(self.peak_instances * self.pol.reserve_frac), 1)
@@ -300,12 +351,23 @@ class ClusterSim:
         recent_arrivals: list[float] = []
         cv_now = 1.0
         while now < horizon:
-            # arrivals this tick
+            # arrivals this tick: bounded admission rejects on a full
+            # queue (fast-fail 503 — the request never enters the backlog)
             while i < len(reqs) and reqs[i].arrival <= now:
-                backlog.append(reqs[i])
-                recent_arrivals.append(reqs[i].arrival)
+                r = reqs[i]
+                recent_arrivals.append(r.arrival)
                 if self.controller is not None:
-                    self.controller.record_arrival(reqs[i].arrival)
+                    self.controller.record_arrival(r.arrival)
+                if self.pol.admission_depth and \
+                        self._queued_total() >= self.pol.admission_depth:
+                    r.rejected = True
+                    r.fail_reason = "queue_full"
+                    self.rejected.append(r)
+                    self.stats.bump("rejected")
+                else:
+                    if r.enqueued_at < 0:
+                        r.enqueued_at = r.arrival
+                    backlog.append(r)
                 i += 1
             if len(recent_arrivals) > 400:
                 del recent_arrivals[:200]
@@ -315,13 +377,31 @@ class ClusterSim:
                 for ev in self.faults.poll(now):
                     self._handle_fault(ev, now)
 
-            # dispatch backlog to least-loaded ready instance (batched)
+            # dispatch backlog to least-loaded ready instance (batched);
+            # EDF orders by priority class then absolute deadline, and
+            # shedding drops requests whose deadline the chosen instance
+            # can no longer meet (before any service time is spent)
             ready = [x for x in self.instances if x.ready_at <= now]
             if ready and backlog:
-                for r in backlog:
-                    inst = min(ready, key=lambda x: x.busy_until)
-                    inst.queue.append(r)
+                pend = sorted(backlog,
+                              key=lambda r: (r.priority,
+                                             r.arrival + r.deadline_s)) \
+                    if self.pol.edf else list(backlog)
                 del backlog[:]
+                for r in pend:
+                    inst = min(ready, key=lambda x: x.busy_until)
+                    if self.brownout is not None \
+                            and self.brownout.sheds(r.priority):
+                        self._shed_req(r, "brownout")
+                        continue
+                    if self.pol.shedding \
+                            and not self._feasible(r, inst, now):
+                        reason = "deadline_expired" \
+                            if now >= r.arrival + r.deadline_s \
+                            else "infeasible"
+                        self._shed_req(r, reason)
+                        continue
+                    inst.queue.append(r)
 
             # service: iteration-based — each pipeline iteration carries up
             # to batch(S) requests and occupies the pipe for t_iter(S);
@@ -341,21 +421,40 @@ class ClusterSim:
                         # co-tenants contend for the shared GPU
                         interf = multiplexing_penalty(cv_now, gamma0=0.15)
                     service = t_iter * (1 + interf)
+                    if self.brownout is not None and self.brownout.level:
+                        # brownout: shrunken token budgets shorten the
+                        # decode, scaling the iteration by the batch's
+                        # mean per-priority budget factor
+                        fs = [self.brownout.budget_factor(r.priority)
+                              for r in batch]
+                        for r, f in zip(batch, fs):
+                            if f < 1.0 and not r.degraded:
+                                r.degraded = True
+                                self.stats.bump("brownout_degraded")
+                        service *= float(np.mean(fs))
                     if now < inst.slow_until:
                         service *= inst.slow_factor
                     elif inst.slow_factor != 1.0:
                         inst.slow_factor = 1.0
-                    finish = max(inst.busy_until, now) + service
+                    t_start = max(inst.busy_until, now)
+                    finish = t_start + service
                     inst.busy_time += service
                     inst.busy_until = finish
                     inst.last_used = finish
                     for r in batch:
                         r.start = max(now, r.arrival)
+                        # per-attempt queue wait: from THIS attempt's
+                        # enqueue, not spanning earlier failed attempts
+                        since = r.enqueued_at if r.enqueued_at >= 0 \
+                            else r.arrival
+                        r.queue_wait = max(r.start - since, 0.0)
+                        r.first_token = t_start + fill
                         r.finish = finish + fill
                         self.stats.record(
                             r.finish, r.latency, r.latency <= self.slo,
-                            queue_s=r.start - r.arrival,
-                            compute_s=S * comp, comm_s=prof.comm_ms * 1e-3)
+                            queue_s=r.queue_wait,
+                            compute_s=S * comp, comm_s=prof.comm_ms * 1e-3,
+                            ttft_s=r.first_token - r.arrival)
 
             # control plane
             if now >= next_ctl:
@@ -371,8 +470,18 @@ class ClusterSim:
                         for inst in self.instances]
                 self.stats.util_samples.append(
                     (now, float(np.mean(busy)) if busy else 0.0))
+                # saturation signal: queue depth against the admission
+                # bound (or the scale-out threshold when unbounded)
+                cap = self.pol.admission_depth or \
+                    self.pol.scale_out_queue * max(len(self.instances), 1)
+                self._saturation += 0.3 * (min(qlen / max(cap, 1), 1.0)
+                                           - self._saturation)
+                self.stats.record_saturation(now, self._saturation)
+                if self.brownout is not None:
+                    self.brownout.update(now, self._saturation)
                 if self.controller is not None:
-                    d = self.controller.step(now, qlen)
+                    d = self.controller.step(now, qlen,
+                                             saturation=self._saturation)
                     if d.changed:
                         self.refactor_count += 1
                         # inflight refactoring: instances adopt the new
@@ -393,6 +502,7 @@ class ClusterSim:
         horizon_used = max(now, 1.0)
         busy_frac = float(np.mean([inst.busy_time for inst in self.instances])
                           ) / horizon_used if self.instances else 0.0
+        accounting, violations = audit_requests(reqs)
         return {
             "policy": self.pol.name,
             "completed": self.stats.completed,
@@ -409,4 +519,10 @@ class ClusterSim:
             "median_recovery_s": self.stats.median_recovery(),
             "breakdown": self.stats.mean_breakdown(),
             "faults": self.stats.fault_summary(horizon_used),
+            "offered": len(reqs),
+            "rejected": len(self.rejected),
+            "shed": len(self.shed),
+            "overload": self.stats.overload_summary(),
+            "accounting": accounting,
+            "accounting_violations": violations,
         }

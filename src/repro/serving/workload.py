@@ -21,10 +21,17 @@ class Request:
     max_new_tokens: int
     model: str = "default"
     deadline_s: float = 10.0            # SLO budget from arrival
+    priority: int = 1                   # 0 interactive / 1 standard / 2 batch
     # lifecycle (filled by engine/simulator)
     start: float = -1.0
     first_token: float = -1.0
     finish: float = -1.0
+    # admission-control lifecycle (serving/admission.py)
+    enqueued_at: float = -1.0           # when THIS attempt entered the queue
+    queue_wait: float = 0.0             # per-attempt queue wait (last attempt)
+    rejected: bool = False              # bounded queue full at submit (503)
+    shed: bool = False                  # dropped by load shedding
+    shed_reason: str = ""
     # fault-tolerance lifecycle (filled by FaultPolicy handling)
     attempts: int = 0                   # aborted attempts so far
     retry_at: float = 0.0               # earliest re-admission time (backoff)
@@ -40,12 +47,48 @@ class Request:
     def met_slo(self) -> bool:
         return self.latency <= self.deadline_s
 
+    @property
+    def terminal_state(self) -> str:
+        """Exactly one of {completed, rejected, shed, failed}, or
+        "pending" when no terminal flag is set.  "ambiguous" flags an
+        accounting bug (two terminal flags at once) — audit_requests
+        property-tests that it never happens."""
+        flags = [("rejected", self.rejected), ("shed", self.shed),
+                 ("failed", self.failed), ("completed", self.finish >= 0)]
+        hits = [name for name, on in flags if on]
+        if not hits:
+            return "pending"
+        return hits[0] if len(hits) == 1 else "ambiguous"
+
+
+TERMINAL_STATES = ("completed", "rejected", "shed", "failed")
+
+
+def audit_requests(requests: list) -> tuple[dict, list]:
+    """Overload accounting invariant: every submitted request terminates in
+    exactly one of TERMINAL_STATES.  Returns (state counts, violations) —
+    violations lists the rid of every pending/ambiguous request."""
+    counts = {s: 0 for s in TERMINAL_STATES}
+    violations = []
+    for r in requests:
+        s = r.terminal_state
+        if s in counts:
+            counts[s] += 1
+        else:
+            violations.append((r.rid, s))
+    return counts, violations
+
 
 def synth_requests(rng: np.random.Generator, *, rate: float, cv: float,
                    duration: float, prompt_mean: int = 512,
                    decode_mean: int = 64, model: str = "default",
-                   t0: float = 0.0, deadline_s: float = 10.0) -> list[Request]:
-    """Gamma-process arrivals with target CV; Splitwise-like length mix."""
+                   t0: float = 0.0, deadline_s: float = 10.0,
+                   priority_mix: tuple | None = None) -> list[Request]:
+    """Gamma-process arrivals with target CV; Splitwise-like length mix.
+
+    ``priority_mix`` draws each request's priority class from the given
+    probabilities (index = class: interactive/standard/batch); None keeps
+    everything in the standard class (and the legacy rng stream)."""
     n = int(rate * duration * 1.5) + 16
     ivs = gamma_interarrivals(rng, rate, cv, n)
     out = []
@@ -57,9 +100,13 @@ def synth_requests(rng: np.random.Generator, *, rate: float, cv: float,
             break
         p = int(np.clip(rng.lognormal(math.log(prompt_mean), 0.8), 16, 8192))
         d = int(np.clip(rng.lognormal(math.log(decode_mean), 0.6), 4, 1024))
+        prio = 1
+        if priority_mix is not None:
+            mix = np.asarray(priority_mix, dtype=float)
+            prio = int(rng.choice(len(mix), p=mix / mix.sum()))
         out.append(Request(rid=rid, arrival=t, prompt_len=p,
                            max_new_tokens=d, model=model,
-                           deadline_s=deadline_s))
+                           deadline_s=deadline_s, priority=prio))
         rid += 1
     return out
 

@@ -1,0 +1,406 @@
+"""Overload-protection tests: bounded admission, EDF, deadline shedding,
+KV watermarks, brownout degradation, saturation-aware refactoring, and the
+terminal-state accounting invariant (every submitted request ends in
+exactly one of {completed, rejected, shed, failed})."""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.granularity import GranularityProfile
+from repro.core.refactoring import RefactoringController
+from repro.serving.admission import (ADMITTED, PRIO_BATCH, PRIO_INTERACTIVE,
+                                     PRIO_STANDARD, REJECTED,
+                                     AdmissionConfig, AdmissionQueue,
+                                     BrownoutController, CostModel)
+from repro.serving.cluster import FragmentedCluster
+from repro.serving.simulator import ClusterSim, POLICIES
+from repro.serving.workload import Request, audit_requests, synth_requests
+
+
+def _req(rid=0, arrival=0.0, prompt=8, tokens=4, deadline=10.0, prio=1):
+    return Request(rid=rid, arrival=arrival, prompt_len=prompt,
+                   max_new_tokens=tokens, deadline_s=deadline, priority=prio)
+
+
+class TestCostModel:
+    def test_estimate_linear_in_tokens(self):
+        cm = CostModel.from_tick(0.05)
+        assert cm.estimate(10, 4) == pytest.approx(0.05 + 4 * 0.05)
+        assert cm.estimate(10, 8) > cm.estimate(10, 4)
+
+    def test_observe_ema_moves_toward_sample(self):
+        cm = CostModel(decode_s_per_token=0.1, ema=0.5)
+        cm.observe_decode(0.2)
+        assert cm.decode_s_per_token == pytest.approx(0.15)
+        cm.observe_prefill(10, 1.0)          # 0.1 s/token sample
+        assert cm.prefill_s_per_token > 0
+
+    def test_from_roofline_positive(self):
+        from repro.configs.base import get_arch
+        cfg = get_arch("qwen1.5-0.5b").smoke_config
+        cm = CostModel.from_roofline(cfg)
+        assert cm.decode_s_per_token > 0
+        assert cm.prefill_s_per_token > 0
+        assert not cm.auto                   # roofline prior is explicit
+
+
+class TestAdmissionQueue:
+    def _q(self, **kw):
+        return AdmissionQueue(AdmissionConfig(**kw),
+                              cost=CostModel.from_tick(0.05))
+
+    def test_reject_on_full_is_fast_fail(self):
+        q = self._q(max_queue_depth=2)
+        assert q.submit(_req(0), 0.0) == ADMITTED
+        assert q.submit(_req(1), 0.0) == ADMITTED
+        r = _req(2)
+        assert q.submit(r, 0.0) == REJECTED
+        assert r.rejected and r.fail_reason == "queue_full"
+        assert r.terminal_state == "rejected"
+        assert len(q) == 2 and len(q.rejected) == 1
+        assert q.stats.counters["rejected"] == 1
+
+    def test_edf_orders_by_absolute_deadline(self):
+        q = self._q(max_queue_depth=8)
+        late = _req(0, arrival=0.0, deadline=9.0)
+        soon = _req(1, arrival=0.0, deadline=2.0)
+        q.submit(late, 0.0)
+        q.submit(soon, 0.0)
+        assert q.pop_admissible(0.0) is soon
+        assert q.pop_admissible(0.0) is late
+
+    def test_priority_class_trumps_deadline(self):
+        q = self._q(max_queue_depth=8)
+        batch_soon = _req(0, deadline=1.0, prio=PRIO_BATCH)
+        inter_late = _req(1, deadline=8.0, prio=PRIO_INTERACTIVE)
+        q.submit(batch_soon, 0.0)
+        q.submit(inter_late, 0.0)
+        assert q.pop_admissible(0.0) is inter_late
+
+    def test_fifo_when_edf_disabled(self):
+        q = self._q(max_queue_depth=8, edf=False)
+        a = _req(0, deadline=9.0)
+        b = _req(1, deadline=1.0)
+        q.submit(a, 0.0)
+        q.submit(b, 0.0)
+        assert q.pop_admissible(0.0) is a
+
+    def test_sheds_expired_deadline(self):
+        q = self._q(max_queue_depth=8)
+        r = _req(0, arrival=0.0, deadline=1.0)
+        q.submit(r, 0.0)
+        assert q.pop_admissible(5.0) is None
+        assert r.shed and r.shed_reason == "deadline_expired"
+        assert r.terminal_state == "shed"
+
+    def test_sheds_infeasible_budget(self):
+        # 100 decode tokens at 0.05 s/token = 5 s >> 1 s remaining
+        q = self._q(max_queue_depth=8)
+        r = _req(0, arrival=0.0, tokens=100, deadline=1.0)
+        q.submit(r, 0.0)
+        assert q.pop_admissible(0.5) is None
+        assert r.shed and r.shed_reason == "infeasible"
+        assert q.stats.counters["shed_infeasible"] == 1
+
+    def test_shedding_disabled_serves_expired(self):
+        q = self._q(max_queue_depth=8, shed=False)
+        r = _req(0, arrival=0.0, deadline=1.0)
+        q.submit(r, 0.0)
+        assert q.pop_admissible(5.0) is r
+
+    def test_expire_sheds_while_slots_full(self):
+        q = self._q(max_queue_depth=8)
+        q.submit(_req(0, deadline=1.0), 0.0)
+        q.submit(_req(1, deadline=30.0), 0.0)
+        assert q.expire(5.0) == 1
+        assert len(q) == 1
+
+    def test_requeue_append_bypasses_depth_bound(self):
+        q = self._q(max_queue_depth=1)
+        q.submit(_req(0), 0.0)
+        q.append(_req(1))                    # retry path
+        assert len(q) == 2
+
+    def test_retry_backoff_respected(self):
+        q = self._q(max_queue_depth=8)
+        r = _req(0)
+        r.retry_at = 5.0
+        q.append(r)
+        assert q.pop_admissible(1.0) is None
+        assert q.pop_admissible(6.0) is r
+
+    def test_kv_watermark_hysteresis(self):
+        q = self._q(max_queue_depth=8, kv_high_watermark=0.9,
+                    kv_low_watermark=0.7)
+        q.submit(_req(0), 0.0)
+        assert q.pop_admissible(0.0, kv_used_frac=0.95) is None  # gated
+        # still gated between watermarks (hysteresis)
+        assert q.pop_admissible(0.0, kv_used_frac=0.8) is None
+        assert q.stats.counters["kv_gate_trips"] == 1
+        # reopens below the low watermark
+        assert q.pop_admissible(0.0, kv_used_frac=0.6) is not None
+
+    def test_saturation_rises_under_pressure(self):
+        q = self._q(max_queue_depth=4)
+        assert q.saturation() == 0.0
+        for i in range(8):
+            q.submit(_req(i), 0.0)
+        assert q.saturation() > 0.5          # rejects push toward 1
+
+
+class TestBrownout:
+    def _bo(self, **kw):
+        return BrownoutController(AdmissionConfig(
+            brownout_high=0.75, brownout_low=0.25, brownout_dwell_s=2.0,
+            **kw))
+
+    def test_level_rises_after_dwell(self):
+        bo = self._bo()
+        assert bo.update(0.0, 0.9) == 0      # entered high band
+        assert bo.update(1.0, 0.9) == 0      # dwell not met
+        assert bo.update(2.5, 0.9) == 1
+        assert bo.update(5.0, 0.9) == 2
+
+    def test_level_decays_when_calm(self):
+        bo = self._bo()
+        bo.level = 2
+        bo.update(0.0, 0.1)
+        assert bo.update(3.0, 0.1) == 1
+        assert bo.update(6.0, 0.1) == 0
+
+    def test_mid_band_holds_level(self):
+        bo = self._bo()
+        bo.level = 1
+        bo.update(0.0, 0.5)
+        assert bo.update(10.0, 0.5) == 1
+
+    def test_budget_factor_orders_by_priority(self):
+        bo = self._bo()
+        bo.level = 1
+        fi = bo.budget_factor(PRIO_INTERACTIVE)
+        fs = bo.budget_factor(PRIO_STANDARD)
+        fb = bo.budget_factor(PRIO_BATCH)
+        assert fi > fs > fb                  # batch degraded hardest
+        assert bo.budget_factor(PRIO_STANDARD) == pytest.approx(0.75)
+
+    def test_budget_floor(self):
+        bo = self._bo()
+        bo.level = 3
+        assert bo.budget_factor(PRIO_BATCH) == \
+            AdmissionConfig().brownout_min_frac
+
+    def test_max_level_sheds_batch_class_only(self):
+        bo = self._bo()
+        bo.level = AdmissionConfig().brownout_max_level
+        assert bo.sheds(PRIO_BATCH)
+        assert not bo.sheds(PRIO_STANDARD)
+        assert not bo.sheds(PRIO_INTERACTIVE)
+
+
+class TestControllerSaturation:
+    def _profiles(self):
+        return [GranularityProfile(stages=4, batch=8, throughput=100,
+                                   latency=0.4, cv_opt=0.5),
+                GranularityProfile(stages=16, batch=32, throughput=140,
+                                   latency=0.9, cv_opt=4.0)]
+
+    def test_saturation_steers_toward_deep_pipeline(self):
+        # steady (LOW-CV) flood: without saturation the shallow profile
+        # wins; the overload signal must still steer deep
+        profs = self._profiles()
+        ctl = RefactoringController(profs, cooldown_s=0.0,
+                                    switch_margin=0.0)
+        for k in range(40):                  # metronome arrivals: cv ~ 0
+            ctl.record_arrival(k * 0.1)
+        calm = ctl.step(4.0, saturation=0.0)
+        assert calm.target.stages == 4
+        hot = ctl.step(4.1, saturation=1.0)
+        assert hot.target.stages == 16
+        assert "sat=1.00" in hot.reason
+
+    def test_saturation_decision_reverts_when_calm(self):
+        profs = self._profiles()
+        ctl = RefactoringController(profs, cooldown_s=0.0,
+                                    switch_margin=0.0)
+        for k in range(40):
+            ctl.record_arrival(k * 0.1)
+        ctl.step(4.0, saturation=1.0)
+        back = ctl.step(4.1, saturation=0.0)
+        assert back.target.stages == 4
+
+
+# ---------------------------------------------------------------------------
+# Engine integration (real JAX data plane)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+    from repro.configs.base import get_arch
+    from repro.models.transformer import init_model
+    cfg = get_arch("qwen1.5-0.5b").smoke_config
+    return cfg, init_model(jax.random.PRNGKey(0), cfg)
+
+
+def _engine(engine_setup, admission=None, **ecfg_kw):
+    from repro.serving.engine import EngineConfig, FlexPipeEngine
+    cfg, params = engine_setup
+    return FlexPipeEngine(cfg, params, [0, 2],
+                          EngineConfig(max_batch=4, max_seq=96,
+                                       admission=admission, **ecfg_kw))
+
+
+class TestEngineOverload:
+    def _trace(self, rate=30.0, duration=3.0, deadline=2.0, seed=0):
+        return synth_requests(np.random.default_rng(seed), rate=rate, cv=2.0,
+                              duration=duration, prompt_mean=16,
+                              decode_mean=8, deadline_s=deadline,
+                              priority_mix=(0.2, 0.6, 0.2))
+
+    def test_accounting_invariant_under_overload(self, engine_setup):
+        reqs = self._trace()
+        eng = _engine(engine_setup,
+                      admission=AdmissionConfig(max_queue_depth=8))
+        stats = eng.run(reqs)
+        counts, violations = audit_requests(reqs)
+        assert violations == []
+        assert sum(counts.values()) == len(reqs)
+        assert counts["rejected"] > 0        # 3x capacity must fast-fail
+        assert counts["completed"] == stats.completed
+        assert counts["rejected"] == len(eng.rejected_requests)
+        assert counts["shed"] == len(eng.shed_requests)
+        assert counts["rejected"] == stats.counters["rejected"]
+
+    def test_admitted_requests_meet_slo(self, engine_setup):
+        # EDF + feasibility shedding: what gets served, gets served in time
+        reqs = self._trace()
+        eng = _engine(engine_setup,
+                      admission=AdmissionConfig(max_queue_depth=8))
+        stats = eng.run(reqs)
+        assert stats.completed > 0
+        assert stats.slo_met >= 0.9 * stats.completed
+
+    def test_legacy_fifo_unchanged_without_admission(self, engine_setup):
+        reqs = self._trace(rate=10.0, duration=2.0, deadline=30.0)
+        eng = _engine(engine_setup)
+        stats = eng.run(reqs)
+        counts, violations = audit_requests(reqs)
+        assert violations == []
+        assert counts["completed"] == len(reqs)
+        assert stats.counters.get("rejected", 0) == 0
+
+    def test_ttft_recorded(self, engine_setup):
+        reqs = self._trace(rate=6.0, duration=2.0, deadline=30.0)
+        eng = _engine(engine_setup)
+        stats = eng.run(reqs)
+        assert len(stats.ttfts) == stats.completed
+        assert all(t >= 0 for t in stats.ttfts)
+        assert all(r.first_token >= r.arrival for r in reqs)
+        p = stats.ttft_percentiles()
+        assert p["p50"] <= p["p99"]
+
+    def test_first_token_set_on_early_finish(self, engine_setup):
+        eng = _engine(engine_setup)
+        r = Request(rid=0, arrival=0.0, prompt_len=8, max_new_tokens=1)
+        eng.submit(r)
+        eng._admit(0.5)
+        assert r.first_token == 0.5          # budget==1 finishes at prefill
+        assert r.finish == 0.5
+
+    def test_queue_wait_is_per_attempt(self, engine_setup):
+        from repro.serving.faults import FaultPolicy
+        eng = _engine(engine_setup)
+        eng.attach_faults(policy=FaultPolicy(timeout_s=30.0,
+                                             degrade_last_attempt=False))
+        r = Request(rid=0, arrival=0.0, prompt_len=8, max_new_tokens=64,
+                    deadline_s=500.0)
+        eng.submit(r)
+        eng._admit(0.0)
+        assert r.queue_wait == 0.0
+        # first attempt times out at t=40: abort + requeue with backoff
+        eng._apply_fault_policy(40.0)
+        assert r.attempts == 1 and r.enqueued_at == 40.0
+        eng._admit(41.0)
+        # per-attempt wait: 1 s since the requeue — NOT 41 s since arrival
+        assert r.queue_wait == pytest.approx(1.0)
+        assert eng.stats.counters["timeouts"] == 1
+
+    def test_brownout_degrades_budget_under_saturation(self, engine_setup):
+        adm = AdmissionConfig(max_queue_depth=4, brownout_dwell_s=0.2,
+                              brownout_high=0.5)
+        reqs = self._trace(rate=60.0, duration=3.0, deadline=4.0)
+        eng = _engine(engine_setup, admission=adm)
+        stats = eng.run(reqs)
+        assert stats.counters.get("brownout_degraded", 0) > 0
+        assert any(r.degraded for r in reqs if r.finish >= 0)
+
+    def test_kv_used_frac_tracks_active_rows(self, engine_setup):
+        eng = _engine(engine_setup)
+        assert eng.kv_used_frac() == 0.0
+        r = Request(rid=0, arrival=0.0, prompt_len=12, max_new_tokens=8)
+        eng.submit(r)
+        eng._admit(0.0)
+        assert eng.kv_used_frac() == pytest.approx(12 / (4 * 96))
+
+
+# ---------------------------------------------------------------------------
+# Simulator integration
+# ---------------------------------------------------------------------------
+
+class TestSimulatorOverload:
+    def _run(self, name, rate, duration=120.0, **overrides):
+        pol = copy.deepcopy(POLICIES[name])
+        for k, v in overrides.items():
+            setattr(pol, k, v)
+        reqs = synth_requests(np.random.default_rng(0), rate=rate, cv=2.0,
+                              duration=duration, deadline_s=4.0,
+                              priority_mix=(0.2, 0.6, 0.2))
+        sim = ClusterSim(pol, FragmentedCluster.synth(np.random.default_rng(1)),
+                         np.random.default_rng(2), slo=4.0)
+        return sim.run(reqs), reqs
+
+    def test_overload_policy_sheds_and_accounts(self):
+        out, reqs = self._run("flexpipe-overload", rate=120.0,
+                              admission_depth=64)
+        assert out["rejected"] + out["shed"] > 0
+        assert not out["accounting_violations"]
+        acct = out["accounting"]
+        assert acct["completed"] + acct["rejected"] + acct["shed"] \
+            + acct["failed"] == len(reqs)
+
+    def test_overload_policy_beats_static_baseline_goodput(self):
+        hot, _ = self._run("flexpipe-overload", rate=120.0)
+        cold, _ = self._run("alpaserve", rate=120.0)
+        assert hot["goodput"] > cold["goodput"]
+
+    def test_legacy_policies_unaffected(self):
+        out, reqs = self._run("flexpipe", rate=20.0)
+        assert out["rejected"] == 0 and out["shed"] == 0
+        assert out["completed"] == len(reqs)
+
+    @settings(max_examples=6, deadline=None)
+    @given(rate=st.sampled_from([30.0, 90.0, 150.0]),
+           depth=st.sampled_from([32, 128]),
+           seed=st.integers(min_value=0, max_value=3))
+    def test_accounting_invariant_property(self, rate, depth, seed):
+        pol = copy.deepcopy(POLICIES["flexpipe-overload"])
+        pol.admission_depth = depth
+        reqs = synth_requests(np.random.default_rng(seed), rate=rate, cv=3.0,
+                              duration=90.0, deadline_s=4.0,
+                              priority_mix=(0.3, 0.4, 0.3))
+        sim = ClusterSim(pol,
+                         FragmentedCluster.synth(np.random.default_rng(1)),
+                         np.random.default_rng(2), slo=4.0)
+        out = sim.run(reqs)
+        # no request may ever be double-terminal, and terminal states +
+        # still-queued-at-horizon must cover the whole trace
+        assert all(s != "ambiguous" for _, s in out["accounting_violations"])
+        pending = sum(1 for _, s in out["accounting_violations"]
+                      if s == "pending")
+        assert sum(out["accounting"].values()) + pending == len(reqs)
+        # conservation against the stats counters
+        assert out["accounting"]["rejected"] == \
+            out["overload"]["rejected"]
+        assert out["accounting"]["shed"] == out["overload"]["shed"]

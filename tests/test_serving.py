@@ -30,6 +30,54 @@ class TestWorkload:
         ts = [r.arrival for r in reqs]
         assert ts == sorted(ts)
 
+    def test_deterministic_under_fixed_seed(self):
+        def gen():
+            return synth_requests(np.random.default_rng(7), rate=20.0,
+                                  cv=2.0, duration=30.0,
+                                  priority_mix=(0.2, 0.6, 0.2))
+        a, b = gen(), gen()
+        assert len(a) == len(b)
+        assert all((x.rid, x.arrival, x.prompt_len, x.max_new_tokens,
+                    x.priority) ==
+                   (y.rid, y.arrival, y.prompt_len, y.max_new_tokens,
+                    y.priority) for x, y in zip(a, b))
+
+    def test_priority_mix_none_preserves_legacy_stream(self):
+        # priority_mix=None must not consume extra rng draws — older
+        # seeds/benchmarks depend on the exact arrival/length stream
+        a = synth_requests(np.random.default_rng(3), rate=20.0, cv=1.0,
+                           duration=20.0)
+        b = synth_requests(np.random.default_rng(3), rate=20.0, cv=1.0,
+                           duration=20.0, priority_mix=None)
+        assert [r.arrival for r in a] == [r.arrival for r in b]
+        assert all(r.priority == 1 for r in a)
+
+    def test_priority_mix_draws_all_classes(self):
+        reqs = synth_requests(np.random.default_rng(5), rate=50.0, cv=1.0,
+                              duration=30.0, priority_mix=(0.3, 0.4, 0.3))
+        prios = {r.priority for r in reqs}
+        assert prios == {0, 1, 2}
+
+    def test_duration_bound_and_length_clamps(self):
+        t0 = 100.0
+        reqs = synth_requests(np.random.default_rng(11), rate=40.0, cv=3.0,
+                              duration=25.0, t0=t0, prompt_mean=16,
+                              decode_mean=4)
+        assert reqs, "trace must not be empty"
+        assert all(t0 < r.arrival <= t0 + 25.0 for r in reqs)
+        assert all(16 <= r.prompt_len <= 8192 for r in reqs)
+        assert all(4 <= r.max_new_tokens <= 1024 for r in reqs)
+
+    def test_phased_trace_unique_monotone_rids(self):
+        rng = np.random.default_rng(2)
+        reqs = phased_trace(rng, [Phase(15, 10, 0.5), Phase(15, 40, 3.0),
+                                  Phase(15, 10, 1.0)])
+        rids = [r.rid for r in reqs]
+        assert rids == list(range(len(reqs)))    # unique + contiguous
+        assert [r.arrival for r in reqs] == sorted(r.arrival for r in reqs)
+        # each phase's arrivals stay inside its window
+        assert max(r.arrival for r in reqs) <= 45.0
+
 
 class TestCluster:
     def test_fragmentation_stats_match_paper(self):
