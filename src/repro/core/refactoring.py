@@ -100,6 +100,59 @@ def merge_with_mask(snap: CacheSnapshot, live: list, live_len: int,
 
 
 # ---------------------------------------------------------------------------
+# Eq. 10 over the paged layout (block-granular validity)
+# ---------------------------------------------------------------------------
+
+def block_validity(block_tables: np.ndarray, valid_len: np.ndarray,
+                   block_size: int, n_blocks: int) -> np.ndarray:
+    """Per-PHYSICAL-block snapshot-valid token counts.
+
+    ``block_tables`` is the snapshot-time (B, max_blocks) table and
+    ``valid_len`` the per-slot validity horizon (0 for slots the snapshot
+    does not cover — e.g. admitted after it was taken).  Slot ``b``'s
+    logical block ``j`` holds tokens [j*bs, (j+1)*bs); its physical block
+    is valid up to ``clamp(valid_len[b] - j*bs, 0, bs)`` offsets.  Blocks
+    owned by uncovered slots (and the null block 0) stay at 0, so
+    ``merge_paged_with_mask`` leaves them to the live cache / replay —
+    a freed-and-reused block can never be corrupted by stale snapshot
+    rows, because only slots whose rid matched at restore time contribute
+    validity (the engine zeroes valid_len for everything else)."""
+    bv = np.zeros(n_blocks, np.int64)
+    tables = np.asarray(block_tables)
+    vl = np.asarray(valid_len).reshape(-1)
+    for b in range(tables.shape[0]):
+        v = int(vl[b]) if b < vl.size else 0
+        for j in range(-(-v // block_size)):
+            pid = int(tables[b, j])
+            if pid > 0:
+                bv[pid] = min(block_size, v - j * block_size)
+    return bv
+
+
+def merge_paged_with_mask(snap: CacheSnapshot, live: list,
+                          block_valid: np.ndarray) -> list:
+    """Eq. 10 on block pools: offsets < block_valid[pid] of physical
+    block ``pid`` come from the snapshot, everything else from the live
+    pool.  Pool leaves are ``(n_blocks, kh, block_size, hd)``; non-pool
+    leaves (no token axis) take the live value, mirroring
+    ``merge_with_mask``'s O(1)-state rule."""
+    from jax.tree_util import tree_map_with_path
+
+    bv = jnp.asarray(block_valid)
+
+    def one(path, s_leaf, l_leaf):
+        name = _leaf_name(path)
+        if name not in ("k", "v") or s_leaf.ndim != 4 \
+                or s_leaf.shape[0] != bv.shape[0]:
+            return l_leaf
+        off = jnp.arange(s_leaf.shape[2])
+        m = off[None, None, :, None] < bv[:, None, None, None]
+        return jnp.where(m, s_leaf, l_leaf)
+
+    return tree_map_with_path(one, snap.per_layer, live)
+
+
+# ---------------------------------------------------------------------------
 # Migration cost model (used by engine timing + simulator)
 # ---------------------------------------------------------------------------
 

@@ -4,6 +4,24 @@ The cache for a model is a list of per-layer cache pytrees (kind-dependent).
 FlexPipe's inflight refactoring regroups per-layer caches between stage
 boundaries; helpers here implement the regrouping and byte accounting used by
 the consistency protocol (Eq. 10) and the simulator's transfer-cost model.
+
+Two cache layouts coexist:
+
+* **dense** — per-layer ``(batch, kh, max_seq, hd)`` leaves: every batch
+  slot reserves ``max_seq`` rows up front (simple, but memory scales with
+  the worst-case sequence).
+* **paged** (vLLM-style) — per-layer block pools ``(n_blocks, kh,
+  block_size, hd)`` plus per-slot block tables mapping logical token
+  blocks to physical pool blocks.  Memory scales with *live* tokens; the
+  host-side ``BlockAllocator`` free-list hands blocks out as prompts
+  stream in and decode appends, and reclaims them on completion.  Block
+  tables are shared across layers (each layer's pool uses the same
+  physical ids), so inflight refactoring stays a zero-copy per-layer
+  re-view exactly as in the dense layout.
+
+Physical block 0 is reserved as the **null block**: unallocated block-table
+entries point at it, so padded prefill positions and idle batch slots
+scatter their writes into a trash block that no masked read ever observes.
 """
 from __future__ import annotations
 
@@ -85,6 +103,147 @@ def cache_bytes(tree) -> int:
     leaves = jax.tree.leaves(
         tree, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
     return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (block pools + block tables)
+# ---------------------------------------------------------------------------
+
+NULL_BLOCK = 0          # physical block 0: trash target for masked writes
+
+
+def can_page(cfg: ModelConfig) -> bool:
+    """Whether the paged layout supports this architecture.
+
+    Paging covers unwindowed full self-attention only: recurrent mixers
+    (mamba/rwkv) carry O(1) state with no token axis to page, sliding
+    windows use ring addressing, and cross-attention memory is a fixed
+    block.  Unsupported archs keep the dense layout (``paged=False``)."""
+    mixers = {k.mixer for k in cfg.pattern}
+    return (mixers == {MIXER_ATTN}
+            and not any(k.extra_cross for k in cfg.pattern)
+            and cfg.sliding_window == 0
+            and cfg.encoder_layers == 0)
+
+
+def paged_layer_struct(cfg: ModelConfig, layer_idx: int, n_blocks: int,
+                       block_size: int, dtype=jnp.bfloat16,
+                       tensor_shards: int = 1) -> dict:
+    """ShapeDtypeStructs for one layer's block pool."""
+    kind = cfg.layer_kind(layer_idx)
+    assert kind.mixer == MIXER_ATTN, \
+        f"paged cache only supports attention layers, got {kind.mixer}"
+    kh = max(cfg.n_kv_heads // tensor_shards, 1)
+    hd = cfg.resolved_head_dim
+    return {"mixer": {
+        "k": jax.ShapeDtypeStruct((n_blocks, kh, block_size, hd), dtype),
+        "v": jax.ShapeDtypeStruct((n_blocks, kh, block_size, hd), dtype)}}
+
+
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16, layers: Optional[range] = None,
+                     tensor_shards: int = 1, materialize: bool = True) -> list:
+    """Zero block pools for ``layers`` (default: all)."""
+    layers = layers if layers is not None else range(cfg.n_layers)
+    structs = [paged_layer_struct(cfg, i, n_blocks, block_size, dtype,
+                                  tensor_shards)
+               for i in layers]
+    if not materialize:
+        return structs
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), structs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def block_bytes(cfg: ModelConfig, block_size: int, dtype=jnp.bfloat16,
+                tensor_shards: int = 1) -> int:
+    """Bytes one physical block costs across ALL layers (HBM sizing unit)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    kh = max(cfg.n_kv_heads // tensor_shards, 1)
+    return cfg.n_layers * 2 * kh * block_size * cfg.resolved_head_dim * itemsize
+
+
+def dense_slot_bytes(cfg: ModelConfig, max_seq: int, dtype=jnp.bfloat16,
+                     tensor_shards: int = 1) -> int:
+    """Bytes one dense batch slot reserves across all layers (the
+    ``max_seq``-proportional cost paging removes)."""
+    return cache_bytes(init_cache(cfg, 1, max_seq, dtype,
+                                  tensor_shards=tensor_shards,
+                                  materialize=False))
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Physical blocks needed to hold ``n_tokens``."""
+    return -(-max(n_tokens, 0) // block_size)
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over physical cache blocks.
+
+    Block ids are handed out LIFO: a fresh allocator allocates ascending
+    ids, and the most recently freed blocks are reused first — both
+    deterministic, so paged runs are byte-reproducible (property-tested
+    in tests/test_paged.py).  Block 0 (``NULL_BLOCK``) is never handed
+    out; it is the trash target for masked writes.
+
+    Allocation is all-or-nothing: ``alloc(n)`` returns ``None`` (and
+    changes nothing) when fewer than ``n`` blocks are free, so a caller
+    never has to roll back a partial grab.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        assert n_blocks >= 2, "need at least one usable block + the null"
+        assert block_size >= 1
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free = list(range(n_blocks - 1, 0, -1))   # pop() yields 1, 2, …
+        self._used: set[int] = set()
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def n_usable(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    def occupancy(self) -> float:
+        """Fraction of usable blocks currently allocated — the paged
+        engine's ``kv_used_frac`` (what admission watermarks gate on)."""
+        return self.n_used / max(self.n_usable, 1)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    # -- alloc / free -------------------------------------------------------
+    def alloc(self, n: int) -> Optional[list[int]]:
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, ids) -> None:
+        for b in ids:
+            assert b in self._used, f"double free / foreign block {b}"
+            self._used.discard(b)
+            self._free.append(b)
+
+
+def fragmentation(live_tokens: int, n_used_blocks: int,
+                  block_size: int) -> float:
+    """Internal fragmentation: allocated-but-dead token slots in tail
+    blocks, as a fraction of allocated capacity (0 when nothing is
+    allocated).  The paged layout has no *external* fragmentation — any
+    free block serves any slot."""
+    cap = n_used_blocks * block_size
+    if cap <= 0:
+        return 0.0
+    return max(cap - live_tokens, 0) / cap
 
 
 # ---------------------------------------------------------------------------

@@ -199,16 +199,73 @@ def decode_attention_jnp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def _paged_attention(q, k, v, cache, block_table, *, pos0, wo, kv_block,
+                     causal, paged_kernel):
+    """Attention over the paged layout: pools + per-slot block tables.
+
+    Decode (S == 1) writes the new token into each slot's tail block and
+    attends over the table; idle slots (all-null tables) scatter into the
+    null block 0, which no masked read ever observes.  Prefill (S > 1,
+    batch 1 — the engine's per-slot prefill) scatters the whole prompt
+    through the table; flash attention runs on the fresh k/v and never
+    reads the pool, matching the dense path exactly.  Paged layouts are
+    global-attention only (``can_page``), so there is no window handling.
+    """
+    from repro.kernels.decode_attention import paged_decode_attention
+
+    B, S, H, hd = q.shape
+    bs = cache["k"].shape[2]
+    M = block_table.shape[1]
+    km = jnp.moveaxis(k, 1, 2).astype(cache["k"].dtype)     # (B, Kh, S, hd)
+    vm = jnp.moveaxis(v, 1, 2).astype(cache["v"].dtype)
+    bt = jnp.asarray(block_table)
+
+    if S == 1:
+        p0 = jnp.broadcast_to(jnp.asarray(pos0).reshape(-1), (B,))
+        pid = bt[jnp.arange(B), p0 // bs]
+        off = p0 % bs
+        kc = cache["k"].at[pid, :, off, :].set(km[:, :, 0, :])
+        vc = cache["v"].at[pid, :, off, :].set(vm[:, :, 0, :])
+        if paged_kernel:
+            out = paged_decode_attention(q[:, 0], kc, vc, bt,
+                                         p0 + 1)[:, None]
+        else:
+            # gather the logical (B, Kh, M*bs, hd) view — identical in
+            # shape and masking to a dense Smax = M*bs cache, so decode
+            # outputs are bit-identical to the dense layout
+            gk = jnp.moveaxis(kc[bt], 2, 1).reshape(B, -1, M * bs, hd)
+            gv = jnp.moveaxis(vc[bt], 2, 1).reshape(B, -1, M * bs,
+                                                    vc.shape[-1])
+            out = decode_attention_jnp(q, gk, gv, cache_len=p0 + 1)
+    else:
+        pos = jnp.asarray(pos0).reshape(-1)[:1] + jnp.arange(S)
+        pids = bt[0, pos // bs]
+        offs = pos % bs
+        kc = cache["k"].at[pids, :, offs, :].set(jnp.moveaxis(km[0], 0, 1))
+        vc = cache["v"].at[pids, :, offs, :].set(jnp.moveaxis(vm[0], 0, 1))
+        out = flash_attention_jnp(q, k, v, causal=causal, q_offset=0,
+                                  kv_block=kv_block)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, {"k": kc, "v": vc}
+
+
 def apply_attention(cfg: ModelConfig, params: Params, x: jax.Array, *,
                     pos0, cache=None, is_global: bool = True, causal: bool = True,
                     tp_axis: Optional[str] = None, kv_block: int = 1024,
-                    sp_axis: Optional[str] = None):
+                    sp_axis: Optional[str] = None, block_table=None,
+                    paged_kernel: bool = False):
     """Self attention; prefill (cache is None or being filled) or decode.
 
     pos0: int32 scalar — absolute position of x[:, 0].
     cache: None (training / stateless prefill) or dict(k, v, head-major).
     sp_axis: sequence-parallel decode — global-attention caches have their
     seq dim sharded over this mesh axis (long-context decode).
+    block_table: paged KV — cache leaves are block POOLS ``(n_blocks, Kh,
+    block_size, hd)`` shared across the batch and ``block_table`` is the
+    ``(B, max_logical_blocks)`` map from each slot's logical blocks to
+    physical ids (0 = null block).  ``paged_kernel`` selects the Pallas
+    block-walk kernel over the gather path (gather reconstructs the dense
+    logical view, so its outputs are bit-identical to the dense layout).
     Returns (y, new_cache, aux).
     """
     B, S, _ = x.shape
@@ -219,6 +276,13 @@ def apply_attention(cfg: ModelConfig, params: Params, x: jax.Array, *,
         positions = (p0[:, None] if p0.ndim == 1 else p0) + jnp.arange(S)
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
+
+    if block_table is not None and cache is not None:
+        y, new_cache = _paged_attention(
+            q, k, v, cache, block_table, pos0=pos0, wo=params["wo"],
+            kv_block=kv_block, causal=causal, paged_kernel=paged_kernel)
+        y = _maybe_psum(y, tp_axis)
+        return y, new_cache, jnp.zeros((), f32)
 
     use_sp = sp_axis is not None and not window and S == 1 and cache is not None
     if use_sp:

@@ -36,6 +36,8 @@ class BlockCtx:
     tp_axis: Optional[str] = None
     sp_axis: Optional[str] = None      # sequence-parallel decode cache axis
     kv_block: int = 1024
+    block_table: Any = None            # paged KV: (B, max_blocks) physical ids
+    paged_kernel: bool = False         # Pallas block-walk vs gather decode
 
 
 # ---------------------------------------------------------------------------
@@ -93,7 +95,8 @@ def apply_block(cfg: ModelConfig, kind: LayerKind, params: dict, x: jax.Array,
             cfg, params["mixer"], h, pos0=ctx.pos0, cache=cache.get("mixer"),
             is_global=ctx.is_global, causal=ctx.causal, tp_axis=ctx.tp_axis,
             kv_block=ctx.kv_block,
-            sp_axis=ctx.sp_axis if ctx.is_global else None)
+            sp_axis=ctx.sp_axis if ctx.is_global else None,
+            block_table=ctx.block_table, paged_kernel=ctx.paged_kernel)
     elif kind.mixer == MIXER_MLA:
         y, mc, a = L.apply_mla(
             cfg, params["mixer"], h, pos0=ctx.pos0, cache=cache.get("mixer"),

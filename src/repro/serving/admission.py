@@ -239,8 +239,8 @@ class AdmissionQueue:
         self._observe(self._depth_frac())
         return ADMITTED
 
-    def pop_admissible(self, now: float,
-                       kv_used_frac: float = 0.0) -> Optional[Request]:
+    def pop_admissible(self, now: float, kv_used_frac: float = 0.0,
+                       fits=None) -> Optional[Request]:
         """Next request to serve, or None.
 
         Order: priority class, then absolute deadline (EDF) or FIFO.
@@ -248,7 +248,13 @@ class AdmissionQueue:
         budget cannot cover the estimated prefill+decode time, are shed
         here — before any prefill work is spent on them.  The KV watermark
         gate pauses admission entirely while cache occupancy is above the
-        high watermark (until it falls below the low one)."""
+        high watermark (until it falls below the low one).
+
+        ``fits`` (optional ``Request -> bool``) is a hard resource check —
+        the paged engine's block-availability gate.  A candidate that
+        doesn't fit is put back (same position, so EDF order is stable)
+        and admission waits for completions to free capacity; unlike
+        shedding this is not a terminal outcome."""
         if self.kv_gate(kv_used_frac):
             return None
         while True:
@@ -265,6 +271,10 @@ class AdmissionQueue:
                     if now >= req.arrival + req.deadline_s else "infeasible"
                 self._shed(req, now, reason)
                 continue
+            if fits is not None and not fits(req):
+                self._q.insert(idx, req)
+                self._observe(self._depth_frac())
+                return None
             self._observe(self._depth_frac())
             return req
 

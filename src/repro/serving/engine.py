@@ -52,8 +52,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.refactoring import CacheSnapshot, merge_with_mask, snapshot
-from repro.models.kvcache import group_by_stage, init_cache
+from repro.core.refactoring import (CacheSnapshot, block_validity,
+                                    merge_paged_with_mask, merge_with_mask,
+                                    snapshot)
+from repro.models.kvcache import (BlockAllocator, blocks_for, can_page,
+                                  fragmentation, group_by_stage, init_cache,
+                                  init_paged_cache)
 from repro.models.model import embed_tokens, lm_head
 from repro.serving.admission import (ADMITTED, REJECTED, AdmissionConfig,
                                      AdmissionQueue, CostModel)
@@ -99,6 +103,22 @@ class EngineConfig:
     # unbounded FIFO; an AdmissionConfig arms bounded admission, EDF
     # ordering, deadline shedding, KV watermarks, and brownout degradation
     admission: Optional[AdmissionConfig] = None
+    # paged KV cache (vLLM-style): per-layer block pools + per-slot block
+    # tables; memory scales with live tokens instead of max_batch*max_seq
+    # rows, admission gates on free blocks, and completed slots return
+    # their blocks to the pool.  Requires fused_decode, an attention-only
+    # pattern (can_page), and max_seq % block_size == 0 (keeps the paged
+    # logical view the same shape as a dense cache — the bit-exactness
+    # invariant the tests pin).  paged=False keeps the dense layout.
+    paged: bool = False
+    block_size: int = 16
+    # physical blocks in the pool; 0 = auto-size to the dense footprint
+    # (max_batch * max_seq tokens) plus the reserved null block
+    n_blocks: int = 0
+    # decode attention over the pools: False = gather the logical view and
+    # reuse the dense decode math (bit-identical to dense); True = Pallas
+    # block-table-walk kernel (kernels/decode_attention.py)
+    paged_kernel: bool = False
 
 
 @dataclass
@@ -122,9 +142,29 @@ class FlexPipeEngine:
         self.refactor_events: list[dict] = []
         self.cache_dtype = (jnp.float32 if self.ecfg.cache_dtype == "float32"
                             else jnp.bfloat16)
-        # canonical state: per-layer cache list, batch dim = max_batch
-        self.caches = init_cache(cfg, self.ecfg.max_batch, self.ecfg.max_seq,
-                                 self.cache_dtype)
+        # paged-KV state (None/empty in dense mode)
+        self.allocator: Optional[BlockAllocator] = None
+        self.block_tables: Optional[np.ndarray] = None
+        self._slot_blocks: list[list[int]] = []
+        self._snap_tables: Optional[np.ndarray] = None
+        if self.ecfg.paged:
+            assert can_page(cfg), \
+                "paged KV needs an attention-only, non-windowed pattern"
+            assert self.ecfg.fused_decode, "paged KV requires fused_decode"
+            assert self.ecfg.max_seq % self.ecfg.block_size == 0, \
+                "max_seq must be a multiple of block_size (bit-exactness)"
+            bs = self.ecfg.block_size
+            self._max_blocks = self.ecfg.max_seq // bs   # table width per slot
+            if self.ecfg.n_blocks <= 0:
+                self.ecfg.n_blocks = \
+                    1 + self.ecfg.max_batch * self._max_blocks
+            self.allocator = BlockAllocator(self.ecfg.n_blocks, bs)
+            self.block_tables = np.zeros(
+                (self.ecfg.max_batch, self._max_blocks), np.int32)
+            self._slot_blocks = [[] for _ in range(self.ecfg.max_batch)]
+        # canonical state: per-layer cache list (dense: batch rows; paged:
+        # block pools shared across the batch)
+        self.caches = self._init_caches()
         self.slots = [Slot() for _ in range(self.ecfg.max_batch)]
         # overload protection: with an AdmissionConfig the queue IS the
         # bounded EDF AdmissionQueue (list-compatible for len/append);
@@ -140,7 +180,8 @@ class FlexPipeEngine:
             cfg, params, max_batch=self.ecfg.max_batch,
             max_seq=self.ecfg.max_seq, cache_dtype=self.cache_dtype,
             prefill_buckets=self.ecfg.prefill_buckets,
-            scan_threshold=self.ecfg.scan_threshold)
+            scan_threshold=self.ecfg.scan_threshold,
+            paged=self.ecfg.paged, paged_kernel=self.ecfg.paged_kernel)
         self._fused = None
         if self.ecfg.fused_decode:
             self._fused, _ = self.executors.fused_decode(tuple(self.boundaries))
@@ -157,6 +198,21 @@ class FlexPipeEngine:
         self._tick_count = 0
         if self.ecfg.warm_profiles:
             self.warmup(self.ecfg.warm_profiles)
+
+    # ------------------------------------------------------------------
+    def _init_caches(self, layers=None) -> list:
+        """Fresh per-layer cache list in the engine's layout (dense rows or
+        paged block pools)."""
+        if self.ecfg.paged:
+            return init_paged_cache(self.cfg, self.ecfg.n_blocks,
+                                    self.ecfg.block_size, self.cache_dtype,
+                                    layers=layers)
+        return init_cache(self.cfg, self.ecfg.max_batch, self.ecfg.max_seq,
+                          self.cache_dtype, layers=layers)
+
+    def _tables_dev(self):
+        """Device copy of the block tables for this tick (paged only)."""
+        return jnp.asarray(self.block_tables) if self.ecfg.paged else None
 
     # ------------------------------------------------------------------
     def _stage_ranges(self) -> list[tuple[int, int]]:
@@ -191,12 +247,16 @@ class FlexPipeEngine:
         B = self.ecfg.max_batch
         tok = jnp.zeros((B, 1), jnp.int32)
         pos = jnp.zeros((B,), jnp.int32)
-        dummy = init_cache(self.cfg, B, self.ecfg.max_seq, self.cache_dtype)
+        dummy = self._init_caches()
+        # warm ticks run over all-null block tables: writes land in the
+        # reserved null block, never in live pool state
+        wt = (jnp.zeros((B, self._max_blocks), jnp.int32)
+              if self.ecfg.paged else None)
         out = None
         for k in keys:
             if self.ecfg.fused_decode:
                 prog, _ = self.executors.fused_decode(k)
-                out, dummy = prog.step(dummy, tok, pos)
+                out, dummy = prog.step(dummy, tok, pos, wt)
             else:
                 x = jnp.zeros((B, 1, self.cfg.d_model),
                               self.params["embed"].dtype)
@@ -224,14 +284,13 @@ class FlexPipeEngine:
         ends = boundaries[1:] + [self.cfg.n_layers]
         ranges = list(zip(boundaries, ends))
         out = jnp.zeros((1, S0), jnp.int32)
-        slot_ix = jnp.zeros((), jnp.int32)
+        slot_ix = (jnp.zeros((1, self._max_blocks), jnp.int32)
+                   if self.ecfg.paged else jnp.zeros((), jnp.int32))
         true_len = jnp.asarray(1, jnp.int32)
         for si, (lo, hi) in enumerate(ranges):
             fn, _ = self.executors.stage_prefill(
                 lo, hi, first=(si == 0), last=(si == len(ranges) - 1))
-            dummy = init_cache(self.cfg, self.ecfg.max_batch,
-                               self.ecfg.max_seq, self.cache_dtype,
-                               layers=range(lo, hi))
+            dummy = self._init_caches(layers=range(lo, hi))
             out, _ = fn(self.params["blocks"][lo:hi],
                         self.executors.head_params, out, dummy, slot_ix,
                         true_len, None)
@@ -281,9 +340,11 @@ class FlexPipeEngine:
         """Force trace+compile off the decode stream via a throwaway tick on
         a donated dummy cache (the engine's live caches are never touched)."""
         B = self.ecfg.max_batch
-        dummy = init_cache(self.cfg, B, self.ecfg.max_seq, self.cache_dtype)
+        dummy = self._init_caches()
+        wt = (jnp.zeros((B, self._max_blocks), jnp.int32)
+              if self.ecfg.paged else None)
         nxt, _ = prog.step(dummy, jnp.zeros((B, 1), jnp.int32),
-                           jnp.zeros((B,), jnp.int32))
+                           jnp.zeros((B,), jnp.int32), wt)
         jax.block_until_ready(nxt)
 
     def _compile_stages(self, missed: list) -> None:
@@ -328,6 +389,12 @@ class FlexPipeEngine:
         self._snapshot = snapshot(self.caches, pos)
         self._snap_rids = [s.request.rid if (not s.done and s.request)
                            else None for s in self.slots]
+        # paged: the snapshot-time tables map each slot's valid tokens to
+        # physical blocks.  Block allocation is append-only while a slot is
+        # active, so these tables are a prefix of the live ones at restore
+        # time for any rid-matching slot.
+        self._snap_tables = (self.block_tables.copy()
+                             if self.ecfg.paged else None)
 
     def fault_step(self, now: float) -> list[dict]:
         """Pre-tick fault handling: poll injected events, beat surviving
@@ -426,9 +493,7 @@ class FlexPipeEngine:
         lost_layers = [li for s in stages for li in range(*ranges[s])]
         for s in stages:                  # that device memory is gone
             lo, hi = ranges[s]
-            self.caches[lo:hi] = init_cache(self.cfg, B, self.ecfg.max_seq,
-                                            self.cache_dtype,
-                                            layers=range(lo, hi))
+            self.caches[lo:hi] = self._init_caches(layers=range(lo, hi))
         n_new = max(len(ranges) - len(stages), 1)
         nb = self._boundaries_for(n_new)
         was_warm = self.executors.is_warm(nb)
@@ -447,10 +512,23 @@ class FlexPipeEngine:
                         and self._snap_rids[i] == s.request.rid:
                     valid[i] = min(int(snap_pos[i]), s.pos)
             if valid.any():
-                live_len = int(max(s.pos for s in self.slots if not s.done))
-                self.caches = merge_with_mask(
-                    CacheSnapshot(self._snapshot.per_layer, valid),
-                    self.caches, live_len)
+                if self.ecfg.paged:
+                    # block-granular Eq. 10: map each covered slot's valid
+                    # horizon through the snapshot-time tables to per-
+                    # physical-block token counts (uncovered slots have
+                    # valid=0, so their freed-and-reused blocks stay live)
+                    bv = block_validity(self._snap_tables, valid,
+                                        self.ecfg.block_size,
+                                        self.ecfg.n_blocks)
+                    self.caches = merge_paged_with_mask(
+                        CacheSnapshot(self._snapshot.per_layer, valid),
+                        self.caches, bv)
+                else:
+                    live_len = int(max(s.pos for s in self.slots
+                                       if not s.done))
+                    self.caches = merge_with_mask(
+                        CacheSnapshot(self._snapshot.per_layer, valid),
+                        self.caches, live_len)
         replayed = self._replay(valid)
         dt = time.perf_counter() - t0
         rec = {"t": now, "kind": "emergency_refactor", "reason": reason,
@@ -502,8 +580,12 @@ class FlexPipeEngine:
                 tok[i, 0] = hist[i][p]
                 pos[i] = p
             if self._fused is not None:
+                # paged replay routes through the LIVE tables (a superset
+                # of the snapshot-time tables for covered slots), so
+                # rebuilt rows land in the blocks the slot already owns
                 _, new = self._fused.step(self.caches, jnp.asarray(tok),
-                                          jnp.asarray(pos))
+                                          jnp.asarray(pos),
+                                          self._tables_dev())
                 self.caches = new
             else:
                 self._decode_unfused(tok, pos)
@@ -517,7 +599,7 @@ class FlexPipeEngine:
         pol = self.fault_policy
         if pol is None:
             return
-        for s in self.slots:
+        for si, s in enumerate(self.slots):
             if s.done or s.request is None:
                 continue
             req = s.request
@@ -529,6 +611,7 @@ class FlexPipeEngine:
             s.request = None
             s.generated = []
             s.pos = 0
+            self._free_slot_blocks(si)
             req.attempts += 1
             self.stats.bump("timeouts")
             if pol.should_retry(req.attempts):
@@ -570,17 +653,91 @@ class FlexPipeEngine:
         return self.admission.shed if self.admission is not None else []
 
     def kv_used_frac(self) -> float:
-        """Fraction of cache slot rows committed by active requests — the
-        quantity the admission watermarks gate on."""
+        """Fraction of KV capacity committed by active requests — the
+        quantity the admission watermarks gate on.  Paged mode reports the
+        block pool's occupancy (real footprint); dense mode approximates
+        it with committed slot rows over total rows."""
+        if self.ecfg.paged:
+            return self.allocator.occupancy()
         used = sum(s.pos for s in self.slots if not s.done)
         return used / float(self.ecfg.max_batch * self.ecfg.max_seq)
+
+    # -- paged block lifecycle -----------------------------------------
+    def _free_slot_blocks(self, i: int) -> None:
+        """Return slot i's blocks to the pool and null out its table row
+        (every completion/abort/preemption path funnels through here)."""
+        if not self.ecfg.paged:
+            return
+        if self._slot_blocks[i]:
+            self.allocator.free(self._slot_blocks[i])
+            self._slot_blocks[i] = []
+        self.block_tables[i, :] = 0
+
+    def _alloc_for_slot(self, i: int, n: int) -> bool:
+        """Append n physical blocks to slot i's table (all-or-nothing)."""
+        ids = self.allocator.alloc(n)
+        if ids is None:
+            return False
+        base = len(self._slot_blocks[i])
+        self.block_tables[i, base:base + n] = ids
+        self._slot_blocks[i].extend(ids)
+        return True
+
+    def _block_need(self, req: Request) -> int:
+        """Blocks a request needs at admission: its (truncated) prompt plus
+        the first decode write — further growth allocates per tick."""
+        plen = (len(req.prompt_tokens) if hasattr(req, "prompt_tokens")
+                else req.prompt_len)
+        S = min(plen, max(1, self.ecfg.max_seq - req.max_new_tokens - 1))
+        return blocks_for(S + 1, self.ecfg.block_size)
+
+    def _ensure_decode_blocks(self, now: float) -> None:
+        """Grow each active slot's table to cover this tick's write
+        position; on pool exhaustion the slot is preempted (blocks freed,
+        request requeued — greedy decode regenerates identically)."""
+        for i, s in enumerate(self.slots):
+            if s.done:
+                continue
+            if s.pos // self.ecfg.block_size < len(self._slot_blocks[i]):
+                continue
+            if not self._alloc_for_slot(i, 1):
+                self._preempt_slot(i, now)
+
+    def _preempt_slot(self, i: int, now: float) -> None:
+        s = self.slots[i]
+        req = s.request
+        self._free_slot_blocks(i)
+        s.done = True
+        s.request = None
+        s.generated = []
+        s.pos = 0
+        s.prompt = None
+        self.stats.bump("paged_preemptions")
+        if req is not None:
+            req.enqueued_at = now
+            req.retry_at = now
+            self.queue.append(req)
+
+    def block_stats(self) -> dict:
+        """Pool occupancy for dashboards/benchmarks (paged mode only)."""
+        if not self.ecfg.paged:
+            return {}
+        live = sum(s.pos for s in self.slots if not s.done)
+        used = self.allocator.n_used
+        return {"used_blocks": used, "free_blocks": self.allocator.n_free,
+                "occupancy": self.allocator.occupancy(),
+                "fragmentation": fragmentation(live, used,
+                                               self.ecfg.block_size)}
 
     def _admit(self, now: float) -> None:
         for slot_id, slot in enumerate(self.slots):
             if not slot.done or not len(self.queue):
                 continue
             if self.admission is not None:
-                req = self.admission.pop_admissible(now, self.kv_used_frac())
+                fits = ((lambda r: self.allocator.can_alloc(
+                    self._block_need(r))) if self.ecfg.paged else None)
+                req = self.admission.pop_admissible(now, self.kv_used_frac(),
+                                                    fits=fits)
                 if req is None:
                     break
                 # brownout: shrink the token budget by priority class
@@ -595,6 +752,9 @@ class FlexPipeEngine:
                           if r.retry_at <= now), None)
                 if j is None:
                     break
+                if self.ecfg.paged and not self.allocator.can_alloc(
+                        self._block_need(self.queue[j])):
+                    break              # wait for completions to free blocks
                 req = self.queue.pop(j)
             req.start = now
             # per-attempt queue wait: measured from THIS attempt's enqueue
@@ -614,13 +774,23 @@ class FlexPipeEngine:
         prompt = prompt[: max(1, self.ecfg.max_seq - req.max_new_tokens - 1)]
         S = int(prompt.shape[0])
         budget = min(req.max_new_tokens, self.ecfg.max_seq - S - 1)
+        if self.ecfg.paged:
+            # blocks for the prompt + the first decode write; bucket
+            # padding beyond them scatters into the null block
+            if not self._alloc_for_slot(
+                    slot_id, blocks_for(S + 1, self.ecfg.block_size)):
+                req.enqueued_at = now       # pool raced empty: requeue
+                req.retry_at = now
+                self.queue.append(req)
+                return
         Sp = self.executors.prefill_bucket(S)
         toks = np.zeros((1, Sp), np.int32)
         toks[0, :S] = prompt
         memory = getattr(req, "memory", None)
         ranges = self._stage_ranges()
         out = jnp.asarray(toks)
-        slot_ix = jnp.asarray(slot_id, jnp.int32)
+        slot_ix = (jnp.asarray(self.block_tables[slot_id:slot_id + 1])
+                   if self.ecfg.paged else jnp.asarray(slot_id, jnp.int32))
         true_len = jnp.asarray(S, jnp.int32)
         for si, (lo, hi) in enumerate(ranges):
             fn, _ = self.executors.stage_prefill(
@@ -648,6 +818,7 @@ class FlexPipeEngine:
                               ttft_s=req.first_token - req.arrival)
             slot.done = True
             slot.request = None
+            self._free_slot_blocks(slot_id)
 
     # ------------------------------------------------------------------
     def decode_step(self, now: float) -> int:
@@ -657,6 +828,10 @@ class FlexPipeEngine:
         argmax; the engine's caches are donated and replaced by the tick's
         outputs, and only B int32 token ids come back to host."""
         B = self.ecfg.max_batch
+        if self.ecfg.paged:
+            # tail-block growth happens BEFORE the active mask is read:
+            # a slot the pool can't grow is preempted and skips this tick
+            self._ensure_decode_blocks(now)
         active = np.array([not s.done for s in self.slots])
         n_active = int(active.sum())
         if not n_active:
@@ -669,7 +844,8 @@ class FlexPipeEngine:
             pos[i] = s.pos
         if self._fused is not None:
             nxt_dev, new = self._fused.step(self.caches, jnp.asarray(tok),
-                                            jnp.asarray(pos))
+                                            jnp.asarray(pos),
+                                            self._tables_dev())
             self.caches = new
             nxt = np.asarray(nxt_dev)
         else:
@@ -693,6 +869,12 @@ class FlexPipeEngine:
                               ttft_s=req.first_token - req.arrival)
             s.done = True
             s.request = None
+            self._free_slot_blocks(i)
+        if self.ecfg.paged:
+            bsst = self.block_stats()
+            self.stats.record_blocks(now, bsst["used_blocks"],
+                                     bsst["free_blocks"],
+                                     bsst["fragmentation"])
         self._maybe_snapshot()
         return n_active
 

@@ -85,7 +85,8 @@ def _stage_ranges(cfg: ModelConfig, boundaries: tuple[int, ...]):
 
 
 def _fused_decode_fn(cfg: ModelConfig, boundaries: tuple[int, ...],
-                     scan_threshold: int):
+                     scan_threshold: int, paged: bool = False,
+                     paged_kernel: bool = False):
     """One decode tick for the whole pipeline configuration.
 
     Runs of at least ``scan_threshold`` identical layers execute as a
@@ -93,12 +94,15 @@ def _fused_decode_fn(cfg: ModelConfig, boundaries: tuple[int, ...],
     time on deep stages — the cold-refactor lever); shorter runs unroll,
     which lets XLA update the donated per-layer caches fully in place
     instead of staging them through a stacked copy (the steady-state
-    runtime lever; see BENCH_engine.json for the measured gap)."""
+    runtime lever; see BENCH_engine.json for the measured gap).
+
+    Paged mode: caches are block POOLS and the tick takes the per-slot
+    block tables as an extra (B, max_blocks) int32 argument — tables grow
+    every tick but keep a fixed shape, so no retrace."""
     flat_runs = [r for lo, hi in _stage_ranges(cfg, boundaries)
                  for r in scan_runs(cfg, lo, hi)]
 
-    def tick(extras, caches, run_params, tok, pos):
-        _note_trace()
+    def run_layers(extras, caches, run_params, tok, pos, bt):
         x = embed_tokens(cfg, extras, tok, pos0=pos)
         new = list(caches)
         for (lo, hi), rp in zip(flat_runs, run_params):
@@ -109,7 +113,8 @@ def _fused_decode_fn(cfg: ModelConfig, boundaries: tuple[int, ...],
             if hi - lo == 1 or hi - lo < scan_threshold:
                 for j, li in enumerate(range(lo, hi)):
                     bp = rp[li - lo] if isinstance(rp, list) else rp
-                    ctx = BlockCtx(pos0=pos, cache=new[li], is_global=glob)
+                    ctx = BlockCtx(pos0=pos, cache=new[li], is_global=glob,
+                                   block_table=bt, paged_kernel=paged_kernel)
                     x, nc, _ = apply_block(cfg, kind, bp, x, ctx)
                     new[li] = nc
             else:
@@ -117,7 +122,8 @@ def _fused_decode_fn(cfg: ModelConfig, boundaries: tuple[int, ...],
 
                 def body(x, inp, _kind=kind, _glob=glob):
                     bp, c = inp
-                    ctx = BlockCtx(pos0=pos, cache=c, is_global=_glob)
+                    ctx = BlockCtx(pos0=pos, cache=c, is_global=_glob,
+                                   block_table=bt, paged_kernel=paged_kernel)
                     x, nc, _ = apply_block(cfg, _kind, bp, x, ctx)
                     return x, nc
 
@@ -127,14 +133,49 @@ def _fused_decode_fn(cfg: ModelConfig, boundaries: tuple[int, ...],
         logits = lm_head(cfg, extras, x)[:, -1, :]
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), tuple(new)
 
+    if paged:
+        def tick(extras, caches, run_params, tok, pos, block_tables):
+            _note_trace()
+            return run_layers(extras, caches, run_params, tok, pos,
+                              block_tables)
+    else:
+        def tick(extras, caches, run_params, tok, pos):
+            _note_trace()
+            return run_layers(extras, caches, run_params, tok, pos, None)
+
     return jax.jit(tick, donate_argnums=(1,))
 
 
 
 
 def _stage_prefill_fn(cfg: ModelConfig, lo: int, hi: int, max_seq: int,
-                      dtype, first: bool, last: bool):
-    """Prompt pass over layers [lo, hi) writing rows straight into the slot."""
+                      dtype, first: bool, last: bool, paged: bool = False):
+    """Prompt pass over layers [lo, hi) writing rows straight into the slot.
+
+    Paged mode replaces the slot index with the slot's (1, max_blocks)
+    block-table row: the paged attention path scatters the prompt's KV
+    straight through the table into the donated pools, so there is no
+    batch-1 temp cache and no ``_slot_write`` pass."""
+
+    if paged:
+        def prefill(blocks, extras, inp, caches, block_row, true_len, memory):
+            _note_trace()
+            x = embed_tokens(cfg, extras, inp) if first else inp
+            new = []
+            for i, bp in enumerate(blocks):
+                li = lo + i
+                ctx = BlockCtx(pos0=0, cache=caches[i], memory=memory,
+                               is_global=cfg.is_global_layer(li),
+                               block_table=block_row)
+                x, nc, _ = apply_block(cfg, cfg.layer_kind(li), bp, x, ctx)
+                new.append(nc)
+            if last:
+                xl = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+                tok = jnp.argmax(lm_head(cfg, extras, xl)[:, -1, :], axis=-1)
+                return tok.astype(jnp.int32), new
+            return x, new
+
+        return jax.jit(prefill, donate_argnums=(3,))
 
     def prefill(blocks, extras, inp, caches, slot, true_len, memory):
         _note_trace()
@@ -194,10 +235,15 @@ class FusedDecodeProgram:
         self._run_params = run_params
         self._head_params = head_params
 
-    def step(self, caches: list, tok, pos):
-        """One tick.  ``caches`` is DONATED — adopt the returned list."""
-        nxt, new = self._fn(self._head_params, list(caches),
-                            self._run_params, tok, pos)
+    def step(self, caches: list, tok, pos, block_tables=None):
+        """One tick.  ``caches`` is DONATED — adopt the returned list.
+        Paged programs additionally take the (B, max_blocks) block tables."""
+        if block_tables is not None:
+            nxt, new = self._fn(self._head_params, list(caches),
+                                self._run_params, tok, pos, block_tables)
+        else:
+            nxt, new = self._fn(self._head_params, list(caches),
+                                self._run_params, tok, pos)
         self.compiled = True
         return nxt, list(new)
 
@@ -212,12 +258,15 @@ class ExecutorCache:
 
     def __init__(self, cfg: ModelConfig, params: dict, *, max_batch: int,
                  max_seq: int, cache_dtype, prefill_buckets: bool = True,
-                 scan_threshold: int = 8):
+                 scan_threshold: int = 8, paged: bool = False,
+                 paged_kernel: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.scan_threshold = scan_threshold
+        self.paged = paged
+        self.paged_kernel = paged_kernel
         self.cache_dtype = jnp.dtype(cache_dtype)
         self.hits = 0
         self.misses = 0
@@ -257,9 +306,12 @@ class ExecutorCache:
         boundaries = tuple(int(b) for b in boundaries)
 
         def build():
-            fn = _shared((self.cfg, "fused", boundaries, self.scan_threshold),
+            fn = _shared((self.cfg, "fused", boundaries, self.scan_threshold,
+                          self.paged, self.paged_kernel),
                          lambda: _fused_decode_fn(self.cfg, boundaries,
-                                                  self.scan_threshold))
+                                                  self.scan_threshold,
+                                                  paged=self.paged,
+                                                  paged_kernel=self.paged_kernel))
             rp = [self._run_container(rlo, rhi)
                   for lo, hi in _stage_ranges(self.cfg, boundaries)
                   for rlo, rhi in scan_runs(self.cfg, lo, hi)]
@@ -288,10 +340,11 @@ class ExecutorCache:
     def stage_prefill(self, lo: int, hi: int, *, first: bool, last: bool):
         key = ("prefill", lo, hi, first, last)
         skey = (self.cfg, "prefill", lo, hi, self.max_seq,
-                self.cache_dtype.name, first, last)
+                self.cache_dtype.name, first, last, self.paged)
         return self._lookup(key, lambda: _shared(
             skey, lambda: _stage_prefill_fn(self.cfg, lo, hi, self.max_seq,
-                                            self.cache_dtype, first, last)))
+                                            self.cache_dtype, first, last,
+                                            paged=self.paged)))
 
     def stage_decode(self, lo: int, hi: int):
         key = ("decode", lo, hi)

@@ -35,6 +35,8 @@ class ServingStats:
     # overload accounting (serving/admission.py)
     ttfts: list = field(default_factory=list)          # time-to-first-token
     saturation_samples: list = field(default_factory=list)  # (t, sat 0..1)
+    # paged-KV accounting: (t, used_blocks, free_blocks, fragmentation 0..1)
+    block_samples: list = field(default_factory=list)
 
     def record(self, finish_t: float, latency: float, met_slo: bool,
                queue_s: float = 0.0, compute_s: float = 0.0,
@@ -68,6 +70,27 @@ class ServingStats:
     def record_saturation(self, t: float, sat: float) -> None:
         self.saturation_samples.append((t, sat))
 
+    def record_blocks(self, t: float, used: int, free: int,
+                      frag: float) -> None:
+        """Block-pool occupancy sample: used/free physical blocks and
+        internal fragmentation (allocated-but-dead token slots in tail
+        blocks / allocated capacity)."""
+        self.block_samples.append((t, used, free, frag))
+
+    def block_summary(self) -> dict:
+        """Real KV footprint next to the slot-fraction watermark signal."""
+        if not self.block_samples:
+            return {"mean_used": 0.0, "max_used": 0, "min_free": 0,
+                    "mean_frag": 0.0, "max_frag": 0.0}
+        used = [u for _, u, _, _ in self.block_samples]
+        free = [f for _, _, f, _ in self.block_samples]
+        frag = [g for _, _, _, g in self.block_samples]
+        return {"mean_used": float(np.mean(used)),
+                "max_used": int(np.max(used)),
+                "min_free": int(np.min(free)),
+                "mean_frag": float(np.mean(frag)),
+                "max_frag": float(np.max(frag))}
+
     def saturation_summary(self) -> dict:
         if not self.saturation_samples:
             return {"mean": 0.0, "max": 0.0}
@@ -90,6 +113,7 @@ class ServingStats:
             "kv_gate_trips": c.get("kv_gate_trips", 0),
             "ttft": self.ttft_percentiles(),
             "saturation": self.saturation_summary(),
+            "blocks": self.block_summary(),
         }
 
     def goodput(self, horizon: float) -> float:
