@@ -42,8 +42,9 @@ def _build_engine(arch: str, max_batch: int, max_seq: int, fused: bool,
     # fill every slot with a request long enough to outlast the measured
     # window, so every tick decodes a full batch
     for i in range(max_batch):
-        eng.submit(Request(rid=i, arrival=0.0, prompt_len=12 + i,
-                           max_new_tokens=decode_budget))
+        res = eng.submit(Request(rid=i, arrival=0.0, prompt_len=12 + i,
+                                 max_new_tokens=decode_budget))
+        assert res.accepted, res
     eng._admit(0.0)
     return eng
 
@@ -63,7 +64,7 @@ def bench_decode(arch: str, fused: bool, ticks: int, max_batch: int,
     t0 = time.perf_counter()
     decoded = 0
     for t in range(ticks):
-        decoded += eng.decode_step(0.0)
+        decoded += eng.step(0.0).decoded      # typed TickReport
     dt = time.perf_counter() - t0
     assert decoded == ticks * max_batch, \
         f"slots drained mid-window ({decoded} != {ticks * max_batch})"

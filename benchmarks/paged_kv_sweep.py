@@ -38,13 +38,14 @@ def _engine(arch: str, *, paged: bool, max_batch: int, max_seq: int,
     from repro.configs.base import get_arch
     from repro.models.transformer import init_model
     from repro.serving.engine import (EngineConfig, FlexPipeEngine,
-                                      balanced_boundaries)
+                                      KVCacheConfig, balanced_boundaries)
 
     cfg = get_arch(arch).smoke_config
     params = init_model(jax.random.PRNGKey(0), cfg)
-    ecfg = EngineConfig(max_batch=max_batch, max_seq=max_seq, paged=paged,
-                        block_size=block_size, n_blocks=n_blocks,
-                        paged_kernel=paged_kernel)
+    ecfg = EngineConfig(max_batch=max_batch, max_seq=max_seq,
+                        kv=KVCacheConfig(paged=paged, block_size=block_size,
+                                         n_blocks=n_blocks,
+                                         paged_kernel=paged_kernel))
     return FlexPipeEngine(cfg, params,
                           balanced_boundaries(cfg.n_layers, 2), ecfg)
 
@@ -53,11 +54,10 @@ def _drain(eng, requests, max_ticks: int):
     """Submit everything at t=0 and tick until drained; returns per-rid
     token streams and the peak number of concurrently active slots."""
     for r in requests:
-        eng.submit(r, now=0.0)
+        assert eng.submit(r, now=0.0).accepted
     hist, peak, now = {}, 0, 0.0
     for _ in range(max_ticks):
-        eng._admit(now)
-        eng.decode_step(now)
+        eng.step(now)
         for s in eng.slots:
             if s.request is not None:
                 hist[s.request.rid] = list(s.generated)
@@ -144,7 +144,7 @@ def bench_throughput(arch: str, *, max_batch: int, max_seq: int,
     from repro.configs.base import get_arch, shrink
     from repro.models.transformer import init_model
     from repro.serving.engine import (EngineConfig, FlexPipeEngine,
-                                      balanced_boundaries)
+                                      KVCacheConfig, balanced_boundaries)
     from repro.serving.workload import Request
 
     cfg = shrink(get_arch(arch).smoke_config, d_model=256, d_ff=2048,
@@ -157,8 +157,8 @@ def bench_throughput(arch: str, *, max_batch: int, max_seq: int,
         # all windows must fit in one generation: spin-up + reps windows
         n_ticks = min(n_ticks, (budget - 5 - 3) // reps)
         ecfg = EngineConfig(max_batch=max_batch, max_seq=max_seq,
-                            paged=paged, block_size=16,
-                            paged_kernel=paged_kernel)
+                            kv=KVCacheConfig(paged=paged, block_size=16,
+                                             paged_kernel=paged_kernel))
         eng = FlexPipeEngine(cfg, params,
                              balanced_boundaries(cfg.n_layers, 2), ecfg)
         for i in range(max_batch):
@@ -172,7 +172,7 @@ def bench_throughput(arch: str, *, max_batch: int, max_seq: int,
             t0 = time.perf_counter()
             decoded = 0
             for _ in range(n_ticks):
-                decoded += eng.decode_step(0.0)
+                decoded += eng.step(0.0).decoded   # typed TickReport
             dt = time.perf_counter() - t0
             assert decoded == n_ticks * max_batch, "slots drained mid-window"
             best_dt = dt if best_dt is None else min(best_dt, dt)

@@ -28,7 +28,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   scale: float, causal: bool, window: int, bq: int, bk: int,
-                  n_kv: int, seq_q: int, seq_kv: int):
+                  n_kv: int, seq_q: int, seq_kv: int, q_offset: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -44,7 +44,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     s = q @ k.T                                # (BQ, BK)
 
     q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
-        + (seq_kv - seq_q)                     # align q to END of kv span
+        + q_offset                             # abs position of q row 0
     k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     mask = k_pos < seq_kv
     if causal:
@@ -70,10 +70,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     scale: float | None = None, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True):
+                    block_k: int = 128, interpret: bool = True,
+                    q_offset: int | None = None):
     """q: (B, Sq, H, hd); k/v: (B, Skv, Kh, hd/hdv). Returns (B, Sq, H, hdv).
 
     interpret=True validates on CPU; on TPU pass interpret=False.
+    q_offset: absolute position of q[:, 0] within the kv span; ``None``
+    keeps the legacy END-alignment (q rows are the last Sq of Skv), which
+    chunked prefill overrides with the chunk's start offset.
     """
     B, Sq, H, hd = q.shape
     Skv, Kh = k.shape[1], k.shape[2]
@@ -98,7 +102,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window,
-        bq=bq, bk=bk, n_kv=nk, seq_q=Sq, seq_kv=Skv)
+        bq=bq, bk=bk, n_kv=nk, seq_q=Sq, seq_kv=Skv,
+        q_offset=(Skv - Sq) if q_offset is None else int(q_offset))
 
     out = pl.pallas_call(
         kernel,

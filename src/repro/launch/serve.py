@@ -16,7 +16,8 @@ from repro.core.controller import FlexPipeController
 from repro.core.granularity import GranularityProfile
 from repro.models.transformer import init_model
 from repro.serving.admission import AdmissionConfig
-from repro.serving.engine import EngineConfig, FlexPipeEngine
+from repro.serving.engine import (EngineConfig, FlexPipeEngine,
+                                  KVCacheConfig, PrefillConfig)
 from repro.serving.faults import (FaultInjector, FaultPolicy,
                                   StageHealthMonitor)
 from repro.serving.workload import audit_requests, synth_requests
@@ -31,31 +32,55 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     # fault injection (0 disables a kind); the schedule is fully determined
     # by --fault-seed, so fault runs are byte-reproducible
-    ap.add_argument("--fault-seed", type=int, default=0)
-    ap.add_argument("--preempt-rate", type=float, default=0.0,
-                    help="stage preemptions per second of sim time")
-    ap.add_argument("--slowdown-rate", type=float, default=0.0)
-    ap.add_argument("--request-timeout", type=float, default=30.0)
-    # overload protection (serving/admission.py); --admission-depth arms it
-    ap.add_argument("--admission-depth", type=int, default=0,
-                    help="bounded admission queue depth (0 = legacy "
-                         "unbounded FIFO, admission control off)")
-    ap.add_argument("--no-edf", action="store_true",
-                    help="disable earliest-deadline-first admission")
-    ap.add_argument("--no-shed", action="store_true",
-                    help="disable deadline-based load shedding")
-    ap.add_argument("--no-brownout", action="store_true",
-                    help="disable brownout budget degradation")
-    ap.add_argument("--kv-high", type=float, default=0.90,
-                    help="KV watermark: pause admission above this "
-                         "slot-row occupancy fraction")
-    ap.add_argument("--kv-low", type=float, default=0.75,
-                    help="KV watermark: resume admission below this")
-    ap.add_argument("--deadline", type=float, default=10.0,
-                    help="per-request SLO budget (seconds from arrival)")
-    ap.add_argument("--priority-mix", default=None,
-                    help="comma probabilities for interactive,standard,"
-                         "batch classes (e.g. 0.2,0.6,0.2)")
+    fault = ap.add_argument_group("faults")
+    fault.add_argument("--fault-seed", type=int, default=0)
+    fault.add_argument("--preempt-rate", type=float, default=0.0,
+                       help="stage preemptions per second of sim time")
+    fault.add_argument("--slowdown-rate", type=float, default=0.0)
+    fault.add_argument("--request-timeout", type=float, default=30.0)
+    # KV-cache layout (EngineConfig.kv — KVCacheConfig)
+    kv = ap.add_argument_group("kv-cache")
+    kv.add_argument("--paged", action="store_true",
+                    help="paged KV cache: block pools + per-slot tables")
+    kv.add_argument("--block-size", type=int, default=16)
+    kv.add_argument("--n-blocks", type=int, default=0,
+                    help="physical blocks in the pool (0 = auto-size to "
+                         "the dense footprint)")
+    kv.add_argument("--paged-kernel", action="store_true",
+                    help="Pallas block-table-walk decode kernel instead "
+                         "of the gather path")
+    # prefill scheduling (EngineConfig.prefill — PrefillConfig)
+    pf = ap.add_argument_group("prefill")
+    pf.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked continuous-batching prefill: tokens per "
+                         "chunk (pow2 >= 16; 0 = whole-prompt prefill)")
+    pf.add_argument("--prefill-budget", type=int, default=0,
+                    help="max bucketed prompt tokens prefetched per tick "
+                         "(0 = one chunk per tick)")
+    pf.add_argument("--no-prefill-buckets", action="store_true",
+                    help="disable pow2 prompt bucketing")
+    # overload protection (EngineConfig.admission — AdmissionConfig);
+    # --admission-depth arms it
+    adm = ap.add_argument_group("admission")
+    adm.add_argument("--admission-depth", type=int, default=0,
+                     help="bounded admission queue depth (0 = legacy "
+                          "unbounded FIFO, admission control off)")
+    adm.add_argument("--no-edf", action="store_true",
+                     help="disable earliest-deadline-first admission")
+    adm.add_argument("--no-shed", action="store_true",
+                     help="disable deadline-based load shedding")
+    adm.add_argument("--no-brownout", action="store_true",
+                     help="disable brownout budget degradation")
+    adm.add_argument("--kv-high", type=float, default=0.90,
+                     help="KV watermark: pause admission above this "
+                          "slot-row occupancy fraction")
+    adm.add_argument("--kv-low", type=float, default=0.75,
+                     help="KV watermark: resume admission below this")
+    adm.add_argument("--deadline", type=float, default=10.0,
+                     help="per-request SLO budget (seconds from arrival)")
+    adm.add_argument("--priority-mix", default=None,
+                     help="comma probabilities for interactive,standard,"
+                          "batch classes (e.g. 0.2,0.6,0.2)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -85,7 +110,16 @@ def main() -> None:
                              warm_profiles=tuple(p.stages for p in profiles),
                              # bound post-preemption replay to 8 ticks
                              snapshot_interval=8,
-                             admission=admission))
+                             admission=admission,
+                             kv=KVCacheConfig(
+                                 paged=args.paged,
+                                 block_size=args.block_size,
+                                 n_blocks=args.n_blocks,
+                                 paged_kernel=args.paged_kernel),
+                             prefill=PrefillConfig(
+                                 buckets=not args.no_prefill_buckets,
+                                 chunk=args.prefill_chunk,
+                                 budget=args.prefill_budget)))
     if args.preempt_rate or args.slowdown_rate:
         eng.attach_faults(
             injector=FaultInjector(seed=args.fault_seed,

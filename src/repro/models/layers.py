@@ -200,7 +200,7 @@ def decode_attention_jnp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 def _paged_attention(q, k, v, cache, block_table, *, pos0, wo, kv_block,
-                     causal, paged_kernel):
+                     causal, paged_kernel, kv_extent=0):
     """Attention over the paged layout: pools + per-slot block tables.
 
     Decode (S == 1) writes the new token into each slot's tail block and
@@ -208,8 +208,14 @@ def _paged_attention(q, k, v, cache, block_table, *, pos0, wo, kv_block,
     null block 0, which no masked read ever observes.  Prefill (S > 1,
     batch 1 — the engine's per-slot prefill) scatters the whole prompt
     through the table; flash attention runs on the fresh k/v and never
-    reads the pool, matching the dense path exactly.  Paged layouts are
-    global-attention only (``can_page``), so there is no window handling.
+    reads the pool, matching the dense path exactly.  Chunked prefill
+    (S > 1 with ``kv_extent`` set) additionally gathers the logical view
+    so chunk n attends over chunks 0..n already resident in the pool; the
+    reduction extent is pinned to ``kv_extent`` so outputs stay
+    bit-identical to a whole-prompt prefill bucketed at that extent
+    (garbage rows past the written prefix are causally masked to exact
+    zeros).  Paged layouts are global-attention only (``can_page``), so
+    there is no window handling.
     """
     from repro.kernels.decode_attention import paged_decode_attention
 
@@ -243,8 +249,20 @@ def _paged_attention(q, k, v, cache, block_table, *, pos0, wo, kv_block,
         offs = pos % bs
         kc = cache["k"].at[pids, :, offs, :].set(jnp.moveaxis(km[0], 0, 1))
         vc = cache["v"].at[pids, :, offs, :].set(jnp.moveaxis(vm[0], 0, 1))
-        out = flash_attention_jnp(q, k, v, causal=causal, q_offset=0,
-                                  kv_block=kv_block)
+        if kv_extent:
+            # chunked prefill: attend over the slot's logical view so this
+            # chunk's queries see all previously committed chunks
+            p0 = jnp.asarray(pos0).reshape(-1)[0]
+            gk = jnp.moveaxis(kc[bt], 2, 1).reshape(B, -1, M * bs, hd)
+            gv = jnp.moveaxis(vc[bt], 2, 1).reshape(B, -1, M * bs,
+                                                    vc.shape[-1])
+            out = flash_attention_jnp(
+                q, jnp.moveaxis(gk[:, :, :kv_extent], 1, 2),
+                jnp.moveaxis(gv[:, :, :kv_extent], 1, 2),
+                causal=causal, q_offset=p0, kv_block=kv_block)
+        else:
+            out = flash_attention_jnp(q, k, v, causal=causal, q_offset=0,
+                                      kv_block=kv_block)
     y = jnp.einsum("bshk,hkd->bsd", out, wo)
     return y, {"k": kc, "v": vc}
 
@@ -253,7 +271,7 @@ def apply_attention(cfg: ModelConfig, params: Params, x: jax.Array, *,
                     pos0, cache=None, is_global: bool = True, causal: bool = True,
                     tp_axis: Optional[str] = None, kv_block: int = 1024,
                     sp_axis: Optional[str] = None, block_table=None,
-                    paged_kernel: bool = False):
+                    paged_kernel: bool = False, kv_extent: int = 0):
     """Self attention; prefill (cache is None or being filled) or decode.
 
     pos0: int32 scalar — absolute position of x[:, 0].
@@ -266,6 +284,12 @@ def apply_attention(cfg: ModelConfig, params: Params, x: jax.Array, *,
     physical ids (0 = null block).  ``paged_kernel`` selects the Pallas
     block-walk kernel over the gather path (gather reconstructs the dense
     logical view, so its outputs are bit-identical to the dense layout).
+    kv_extent: chunked prefill — S > 1 tokens are written at ``pos0`` and
+    attend over cache rows [0, kv_extent) (earlier chunks + this one, with
+    garbage past the written prefix causally masked to exact zeros) rather
+    than over the fresh tokens alone.  Pinning the reduction extent keeps
+    greedy outputs bit-identical to a whole-prompt prefill bucketed at
+    ``kv_extent``.
     Returns (y, new_cache, aux).
     """
     B, S, _ = x.shape
@@ -280,7 +304,8 @@ def apply_attention(cfg: ModelConfig, params: Params, x: jax.Array, *,
     if block_table is not None and cache is not None:
         y, new_cache = _paged_attention(
             q, k, v, cache, block_table, pos0=pos0, wo=params["wo"],
-            kv_block=kv_block, causal=causal, paged_kernel=paged_kernel)
+            kv_block=kv_block, causal=causal, paged_kernel=paged_kernel,
+            kv_extent=kv_extent)
         y = _maybe_psum(y, tp_axis)
         return y, new_cache, jnp.zeros((), f32)
 
@@ -311,6 +336,11 @@ def apply_attention(cfg: ModelConfig, params: Params, x: jax.Array, *,
             start = jnp.mod(pos0, Smax) if window else pos0
             kc = jax.lax.dynamic_update_slice(cache["k"], km, (0, 0, start, 0))
             vc = jax.lax.dynamic_update_slice(cache["v"], vm, (0, 0, start, 0))
+        elif kv_extent:
+            # chunked prefill: commit this chunk's rows at pos0 (the engine
+            # guarantees pos0 + S <= Smax)
+            kc = jax.lax.dynamic_update_slice(cache["k"], km, (0, 0, pos0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], vm, (0, 0, pos0, 0))
         elif S >= Smax:
             # prefill larger than ring: keep the last Smax tokens, placed so
             # that token at absolute position p sits at slot p % Smax
@@ -326,6 +356,13 @@ def apply_attention(cfg: ModelConfig, params: Params, x: jax.Array, *,
     if S == 1 and cache is not None:
         out = decode_attention_jnp(q, new_cache["k"], new_cache["v"],
                                    cache_len=pos0 + 1, window=window)
+    elif kv_extent and cache is not None:
+        # chunked prefill: attend over all committed chunks 0..n, extent
+        # pinned at kv_extent for bit-exactness vs whole-prompt prefill
+        out = flash_attention_jnp(
+            q, jnp.moveaxis(new_cache["k"][:, :, :kv_extent], 1, 2),
+            jnp.moveaxis(new_cache["v"][:, :, :kv_extent], 1, 2),
+            causal=causal, window=window, q_offset=pos0, kv_block=kv_block)
     else:
         out = flash_attention_jnp(q, k, v, causal=causal, window=window,
                                   q_offset=0, kv_block=kv_block)

@@ -38,6 +38,9 @@ class BlockCtx:
     kv_block: int = 1024
     block_table: Any = None            # paged KV: (B, max_blocks) physical ids
     paged_kernel: bool = False         # Pallas block-walk vs gather decode
+    kv_extent: int = 0                 # chunked prefill: attend over cache
+                                       # rows [0, kv_extent) instead of the
+                                       # fresh tokens only (0 = off)
 
 
 # ---------------------------------------------------------------------------
@@ -96,7 +99,8 @@ def apply_block(cfg: ModelConfig, kind: LayerKind, params: dict, x: jax.Array,
             is_global=ctx.is_global, causal=ctx.causal, tp_axis=ctx.tp_axis,
             kv_block=ctx.kv_block,
             sp_axis=ctx.sp_axis if ctx.is_global else None,
-            block_table=ctx.block_table, paged_kernel=ctx.paged_kernel)
+            block_table=ctx.block_table, paged_kernel=ctx.paged_kernel,
+            kv_extent=ctx.kv_extent)
     elif kind.mixer == MIXER_MLA:
         y, mc, a = L.apply_mla(
             cfg, params["mixer"], h, pos0=ctx.pos0, cache=cache.get("mixer"),

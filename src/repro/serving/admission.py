@@ -81,17 +81,25 @@ class CostModel:
         self.decode_s_per_token += self.ema * (seconds_per_token
                                                - self.decode_s_per_token)
 
-    def seed_from_tick(self, tick_s: float) -> None:
+    def seed_from_tick(self, tick_s: float,
+                       prefill_tokens_per_tick: int = 0) -> None:
         """Sim-time serving: prefill costs one admission tick, decode one
-        tick per token (the engine's ``time_per_tick`` clock)."""
+        tick per token (the engine's ``time_per_tick`` clock).
+
+        With chunked prefill armed, a prompt instead costs one tick per
+        ``prefill_tokens_per_tick`` prompt tokens (the engine's per-tick
+        chunk budget), so feasibility shedding charges long prompts their
+        real multi-tick prefill latency instead of a single tick."""
         self.overhead_s = tick_s
-        self.prefill_s_per_token = 0.0
+        self.prefill_s_per_token = (tick_s / prefill_tokens_per_tick
+                                    if prefill_tokens_per_tick > 0 else 0.0)
         self.decode_s_per_token = tick_s
 
     @classmethod
-    def from_tick(cls, tick_s: float) -> "CostModel":
+    def from_tick(cls, tick_s: float,
+                  prefill_tokens_per_tick: int = 0) -> "CostModel":
         cm = cls(auto=False)
-        cm.seed_from_tick(tick_s)
+        cm.seed_from_tick(tick_s, prefill_tokens_per_tick)
         return cm
 
     @classmethod

@@ -44,6 +44,7 @@ stage program pins to its own ICI slice (device_put on the stage's devices).
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -59,8 +60,9 @@ from repro.models.kvcache import (BlockAllocator, blocks_for, can_page,
                                   fragmentation, group_by_stage, init_cache,
                                   init_paged_cache)
 from repro.models.model import embed_tokens, lm_head
-from repro.serving.admission import (ADMITTED, REJECTED, AdmissionConfig,
-                                     AdmissionQueue, CostModel)
+from repro.serving.admission import (ADMITTED, PRIO_STANDARD, REJECTED,
+                                     AdmissionConfig, AdmissionQueue,
+                                     CostModel)
 from repro.serving.executor_cache import ExecutorCache, trace_count
 from repro.serving.faults import (COMM_TRANSIENT, OOM, PREEMPT_STAGE,
                                   SLOWDOWN)
@@ -80,36 +82,16 @@ def balanced_boundaries(n_layers: int, n_stages: int) -> list[int]:
 
 
 @dataclass
-class EngineConfig:
-    max_batch: int = 8
-    max_seq: int = 256
-    cache_dtype: str = "float32"
-    eos_token: int = -1              # -1: run to max_new_tokens
-    control_interval: float = 1.0    # controller cadence (sim-time seconds)
-    fused_decode: bool = True        # single-dispatch decode tick
-    prefill_buckets: bool = True     # pad prompts to pow2 buckets (when safe)
-    # layer runs at least this deep execute as a stacked lax.scan (compile
-    # time lever); shallower runs unroll for in-place donated cache updates
-    scan_threshold: int = 8
-    # granularity profiles (stage counts) to precompile at engine start so
-    # refactoring between them never traces; () = compile lazily
-    warm_profiles: tuple[int, ...] = ()
-    # Eq. 10 snapshot cadence in decode ticks (0 = off): every interval-th
-    # tick the engine copies the per-layer caches + per-slot valid lengths
-    # to a host-side CacheSnapshot, bounding the replay delta after a
-    # stage preemption to at most `snapshot_interval` ticks
-    snapshot_interval: int = 0
-    # overload protection (serving/admission.py): None keeps the legacy
-    # unbounded FIFO; an AdmissionConfig arms bounded admission, EDF
-    # ordering, deadline shedding, KV watermarks, and brownout degradation
-    admission: Optional[AdmissionConfig] = None
-    # paged KV cache (vLLM-style): per-layer block pools + per-slot block
-    # tables; memory scales with live tokens instead of max_batch*max_seq
-    # rows, admission gates on free blocks, and completed slots return
-    # their blocks to the pool.  Requires fused_decode, an attention-only
-    # pattern (can_page), and max_seq % block_size == 0 (keeps the paged
-    # logical view the same shape as a dense cache — the bit-exactness
-    # invariant the tests pin).  paged=False keeps the dense layout.
+class KVCacheConfig:
+    """KV-cache layout knobs (vLLM-style paging; ``paged=False`` keeps the
+    dense ``max_batch x max_seq`` row layout).
+
+    Paged mode uses per-layer block pools + per-slot block tables: memory
+    scales with live tokens, admission gates on free blocks, and completed
+    slots return their blocks to the pool.  Requires fused_decode, an
+    attention-only pattern (``can_page``), and ``max_seq % block_size == 0``
+    (keeps the paged logical view the same shape as a dense cache — the
+    bit-exactness invariant the tests pin)."""
     paged: bool = False
     block_size: int = 16
     # physical blocks in the pool; 0 = auto-size to the dense footprint
@@ -119,6 +101,152 @@ class EngineConfig:
     # reuse the dense decode math (bit-identical to dense); True = Pallas
     # block-table-walk kernel (kernels/decode_attention.py)
     paged_kernel: bool = False
+
+
+@dataclass
+class PrefillConfig:
+    """Prefill scheduling knobs.
+
+    ``chunk`` > 0 arms chunked continuous-batching prefill: each admitted
+    prompt is split into ``chunk``-token pieces (pow2, >= 16; the final
+    partial piece pads to its own pow2 bucket) and at most ``budget``
+    bucketed prompt tokens are pumped per engine tick, round-robin across
+    mid-prefill slots, while decode slots keep emitting tokens.  Greedy
+    outputs are bit-identical to whole-prompt prefill (the chunk programs
+    pin their attention reduction extent to the whole prompt's bucket).
+    Falls back to whole-prompt prefill when the architecture can't chunk
+    (non-attention mixers, sliding windows, or a non-float32 cache).
+    """
+    buckets: bool = True    # pad prompts to pow2 buckets (when safe)
+    chunk: int = 0          # tokens per prefill chunk (0 = whole-prompt)
+    budget: int = 0         # max bucketed prompt tokens per tick (0 = chunk)
+
+
+_LEGACY_KV = {"paged": "paged", "block_size": "block_size",
+              "n_blocks": "n_blocks", "paged_kernel": "paged_kernel"}
+_LEGACY_PREFILL = {"prefill_buckets": "buckets", "prefill_chunk": "chunk",
+                   "prefill_budget": "budget"}
+
+
+class EngineConfig:
+    """Engine configuration: scalar knobs plus typed sub-configs.
+
+    ``kv`` (KVCacheConfig) owns the cache layout, ``prefill``
+    (PrefillConfig) the prefill scheduler, and ``admission``
+    (AdmissionConfig, serving/admission.py) the overload protection.
+    The pre-redesign flat kwargs (``paged=``, ``block_size=``,
+    ``n_blocks=``, ``paged_kernel=``, ``prefill_buckets=``) are still
+    accepted with a DeprecationWarning and forwarded into the sub-configs;
+    the flat names stay readable as properties so old call sites keep
+    working unchanged.
+    """
+
+    def __init__(self, max_batch: int = 8, max_seq: int = 256,
+                 cache_dtype: str = "float32", eos_token: int = -1,
+                 control_interval: float = 1.0, fused_decode: bool = True,
+                 scan_threshold: int = 8,
+                 warm_profiles: tuple[int, ...] = (),
+                 snapshot_interval: int = 0,
+                 admission: Optional[AdmissionConfig] = None,
+                 kv: Optional[KVCacheConfig] = None,
+                 prefill: Optional[PrefillConfig] = None, **legacy):
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.cache_dtype = cache_dtype
+        self.eos_token = eos_token               # -1: run to max_new_tokens
+        self.control_interval = control_interval  # controller cadence (sim s)
+        self.fused_decode = fused_decode         # single-dispatch decode tick
+        # layer runs at least this deep execute as a stacked lax.scan
+        # (compile time lever); shallower runs unroll for in-place donated
+        # cache updates
+        self.scan_threshold = scan_threshold
+        # granularity profiles (stage counts) to precompile at engine start
+        # so refactoring between them never traces; () = compile lazily
+        self.warm_profiles = warm_profiles
+        # Eq. 10 snapshot cadence in decode ticks (0 = off): every
+        # interval-th tick the engine copies the per-layer caches + per-slot
+        # valid lengths to a host-side CacheSnapshot, bounding the replay
+        # delta after a stage preemption to at most `snapshot_interval` ticks
+        self.snapshot_interval = snapshot_interval
+        # overload protection (serving/admission.py): None keeps the legacy
+        # unbounded FIFO; an AdmissionConfig arms bounded admission, EDF
+        # ordering, deadline shedding, KV watermarks, brownout degradation
+        self.admission = admission
+        self.kv = kv if kv is not None else KVCacheConfig()
+        self.prefill = prefill if prefill is not None else PrefillConfig()
+        for k, v in legacy.items():
+            if k in _LEGACY_KV:
+                warnings.warn(
+                    f"EngineConfig({k}=...) is deprecated; pass "
+                    f"kv=KVCacheConfig({_LEGACY_KV[k]}=...) instead",
+                    DeprecationWarning, stacklevel=2)
+                setattr(self.kv, _LEGACY_KV[k], v)
+            elif k in _LEGACY_PREFILL:
+                warnings.warn(
+                    f"EngineConfig({k}=...) is deprecated; pass "
+                    f"prefill=PrefillConfig({_LEGACY_PREFILL[k]}=...) "
+                    "instead", DeprecationWarning, stacklevel=2)
+                setattr(self.prefill, _LEGACY_PREFILL[k], v)
+            else:
+                raise TypeError(
+                    f"EngineConfig got an unexpected keyword {k!r}")
+        c = self.prefill.chunk
+        if c:
+            if c < 16 or (c & (c - 1)):
+                raise ValueError(
+                    f"prefill chunk must be a power of two >= 16, got {c}")
+            if self.max_seq % c:
+                raise ValueError(
+                    f"max_seq ({self.max_seq}) must be a multiple of the "
+                    f"prefill chunk ({c}) so chunk starts never cross the "
+                    "prompt bucket (bit-exactness invariant)")
+
+    # -- flat views of the nested knobs (pre-redesign call sites) --------
+    @property
+    def paged(self) -> bool:
+        return self.kv.paged
+
+    @property
+    def block_size(self) -> int:
+        return self.kv.block_size
+
+    @property
+    def n_blocks(self) -> int:
+        return self.kv.n_blocks
+
+    @property
+    def paged_kernel(self) -> bool:
+        return self.kv.paged_kernel
+
+    @property
+    def prefill_buckets(self) -> bool:
+        return self.prefill.buckets
+
+
+@dataclass(frozen=True)
+class SubmitResult:
+    """Typed verdict from ``Engine.submit``: truthy iff the request was
+    enqueued; ``reason`` carries the admission verdict string (ADMITTED /
+    REJECTED) and ``queue_depth`` the post-submit depth."""
+    accepted: bool
+    reason: str
+    queue_depth: int
+
+    def __bool__(self) -> bool:
+        return self.accepted
+
+
+@dataclass(frozen=True)
+class TickReport:
+    """Typed result of one ``Engine.step``: what the tick actually did."""
+    now: float
+    decoded: int           # tokens emitted by decode slots this tick
+    prefill_tokens: int    # bucketed prompt tokens pumped through chunks
+    prefilling: int        # slots still mid-prefill after the tick
+    admitted: int          # requests assigned to slots this tick
+    completed: int         # requests finished this tick
+    queue_depth: int       # queue depth after the tick
+    recoveries: int        # emergency recoveries performed this tick
 
 
 @dataclass
@@ -156,7 +284,7 @@ class FlexPipeEngine:
             bs = self.ecfg.block_size
             self._max_blocks = self.ecfg.max_seq // bs   # table width per slot
             if self.ecfg.n_blocks <= 0:
-                self.ecfg.n_blocks = \
+                self.ecfg.kv.n_blocks = \
                     1 + self.ecfg.max_batch * self._max_blocks
             self.allocator = BlockAllocator(self.ecfg.n_blocks, bs)
             self.block_tables = np.zeros(
@@ -185,6 +313,20 @@ class FlexPipeEngine:
         self._fused = None
         if self.ecfg.fused_decode:
             self._fused, _ = self.executors.fused_decode(tuple(self.boundaries))
+        # chunked continuous-batching prefill: armed only when both the
+        # config asks for it AND the architecture supports bit-exact
+        # chunking (attention-only, unwindowed, float32 cache)
+        self._chunk = 0
+        self._prefill_rr = 0          # round-robin cursor over prefill slots
+        if self.ecfg.prefill.chunk:
+            if self.executors.can_chunk:
+                self._chunk = self.ecfg.prefill.chunk
+            else:
+                warnings.warn(
+                    "prefill.chunk requested but this architecture cannot "
+                    "chunk bit-exactly (needs attention-only mixers, no "
+                    "sliding window, float32 cache); falling back to "
+                    "whole-prompt prefill", stacklevel=2)
         # fault-tolerance state (armed via attach_faults)
         self.faults = None               # FaultInjector
         self.fault_policy = None         # FaultPolicy
@@ -556,17 +698,28 @@ class FlexPipeEngine:
         Replay feeds the SAME tokens at the SAME positions through the
         (refactored) decode program, so rebuilt rows are bit-identical to
         the originals for snapshot-covered slots; sampled outputs are
-        discarded (the committed text is already host-side)."""
-        active = [i for i, s in enumerate(self.slots) if not s.done]
+        discarded (the committed text is already host-side).
+
+        A chunked mid-prefill slot's history is the prompt prefix its
+        cursor has committed (``prompt[:pos]``); its remaining chunks run
+        normally after recovery.  Slots with ``pos == 0`` (assigned but no
+        chunk committed yet) have no rows to rebuild and are skipped —
+        their batch rows take the idle row-0 write, which chunk 0
+        overwrites."""
+        active = [i for i, s in enumerate(self.slots)
+                  if not s.done and s.pos > 0]
         if not active:
             return 0
         B = self.ecfg.max_batch
         hist = {}
         for i in active:
             s = self.slots[i]
-            h = np.concatenate([
-                np.asarray(s.prompt, dtype=np.int64),
-                np.asarray(s.generated[:-1], dtype=np.int64)])
+            if s.generated:
+                h = np.concatenate([
+                    np.asarray(s.prompt, dtype=np.int64),
+                    np.asarray(s.generated[:-1], dtype=np.int64)])
+            else:
+                h = np.asarray(s.prompt[:s.pos], dtype=np.int64)
             assert len(h) == s.pos, "history must cover committed rows"
             hist[i] = h
         cursor = {i: int(valid[i]) for i in active}
@@ -633,16 +786,22 @@ class FlexPipeEngine:
                 self.failed_requests.append(req)
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request, now: Optional[float] = None) -> str:
+    def submit(self, req: Request, now: Optional[float] = None) -> SubmitResult:
         """Enqueue a request.  With admission control armed this is the
         bounded fast-fail point: a full queue rejects immediately (the
-        503 path — no prefill work is ever spent on a rejected request)."""
+        503 path — no prefill work is ever spent on a rejected request).
+
+        Returns a typed ``SubmitResult`` (truthy iff enqueued; the old
+        ADMITTED/REJECTED sentinel survives as ``.reason``)."""
         t = req.arrival if now is None else now
         if self.admission is not None:
-            return self.admission.submit(req, t)
+            verdict = self.admission.submit(req, t)
+            reason = (ADMITTED if verdict == ADMITTED
+                      else (getattr(req, "fail_reason", "") or REJECTED))
+            return SubmitResult(verdict == ADMITTED, reason, len(self.queue))
         req.enqueued_at = t
         self.queue.append(req)
-        return ADMITTED
+        return SubmitResult(True, ADMITTED, len(self.queue))
 
     @property
     def rejected_requests(self) -> list[Request]:
@@ -691,17 +850,34 @@ class FlexPipeEngine:
         S = min(plen, max(1, self.ecfg.max_seq - req.max_new_tokens - 1))
         return blocks_for(S + 1, self.ecfg.block_size)
 
+    def _pick_victim(self) -> int:
+        """Preemption victim on pool exhaustion: the lowest-priority live
+        slot (largest priority class value), breaking ties by most blocks
+        held (frees the most pool) and then by highest slot index — fully
+        deterministic, so requeue order (and therefore greedy regeneration)
+        is reproducible."""
+        live = [i for i, s in enumerate(self.slots) if not s.done]
+        return max(live, key=lambda i: (
+            getattr(self.slots[i].request, "priority", PRIO_STANDARD)
+            if self.slots[i].request is not None else PRIO_STANDARD,
+            len(self._slot_blocks[i]), i))
+
     def _ensure_decode_blocks(self, now: float) -> None:
         """Grow each active slot's table to cover this tick's write
-        position; on pool exhaustion the slot is preempted (blocks freed,
-        request requeued — greedy decode regenerates identically)."""
+        position; on pool exhaustion a victim slot is preempted (blocks
+        freed, request requeued — greedy decode regenerates identically).
+        The victim is chosen by ``_pick_victim`` (lowest priority / most
+        blocks), not simply whichever slot's tail allocation failed."""
         for i, s in enumerate(self.slots):
             if s.done:
                 continue
             if s.pos // self.ecfg.block_size < len(self._slot_blocks[i]):
                 continue
-            if not self._alloc_for_slot(i, 1):
-                self._preempt_slot(i, now)
+            while not self._alloc_for_slot(i, 1):
+                victim = self._pick_victim()
+                self._preempt_slot(victim, now)
+                if victim == i:
+                    break              # the requester itself lost the tie
 
     def _preempt_slot(self, i: int, now: float) -> None:
         s = self.slots[i]
@@ -729,7 +905,13 @@ class FlexPipeEngine:
                 "fragmentation": fragmentation(live, used,
                                                self.ecfg.block_size)}
 
-    def _admit(self, now: float) -> None:
+    def _admit(self, now: float) -> int:
+        """Fill free slots from the queue; returns #requests assigned.
+
+        With chunked prefill armed, admission only *assigns* the slot (its
+        chunks are pumped by ``_prefill_step``); otherwise the whole prompt
+        prefills here, as before."""
+        admitted = 0
         for slot_id, slot in enumerate(self.slots):
             if not slot.done or not len(self.queue):
                 continue
@@ -761,19 +943,130 @@ class FlexPipeEngine:
             # time, never spanning earlier failed attempts
             since = req.enqueued_at if req.enqueued_at >= 0 else req.arrival
             req.queue_wait = max(now - since, 0.0)
-            self._prefill_into_slot(slot_id, req, now)
+            if self._chunk:
+                if self._assign_slot(slot_id, req, now):
+                    admitted += 1
+            else:
+                self._prefill_into_slot(slot_id, req, now)
+                admitted += 1
+        return admitted
+
+    def _truncate_prompt(self, req: Request) -> tuple[np.ndarray, int]:
+        """Admitted prompt and clamped decode budget: the prompt truncates
+        (keeping >= 1 token) so prompt + generated tokens fit max_seq."""
+        prompt = np.asarray(req.prompt_tokens) \
+            if hasattr(req, "prompt_tokens") \
+            else np.arange(req.prompt_len) % self.cfg.vocab_size
+        prompt = prompt[: max(1, self.ecfg.max_seq - req.max_new_tokens - 1)]
+        budget = min(req.max_new_tokens,
+                     self.ecfg.max_seq - int(prompt.shape[0]) - 1)
+        return prompt, budget
+
+    def _assign_slot(self, slot_id: int, req: Request, now: float) -> bool:
+        """Chunked admission: bind the request to the slot and set its
+        prefill cursor to zero — no model work happens here.  ``slot.pos``
+        doubles as the cursor (it always counts committed cache rows), and
+        ``generated == []`` marks the slot as mid-prefill."""
+        prompt, budget = self._truncate_prompt(req)
+        S = int(prompt.shape[0])
+        if self.ecfg.paged:
+            # all blocks for the prompt + first decode write are claimed up
+            # front: chunk scatters and parked decode writes both stay
+            # inside the slot's own blocks
+            if not self._alloc_for_slot(
+                    slot_id, blocks_for(S + 1, self.ecfg.block_size)):
+                req.enqueued_at = now       # pool raced empty: requeue
+                req.retry_at = now
+                self.queue.append(req)
+                return False
+        slot = self.slots[slot_id]
+        slot.request = req
+        slot.prompt = prompt.astype(np.int64)
+        slot.pos = 0
+        slot.generated = []
+        slot.budget = budget
+        slot.done = False
+        return True
+
+    def _prefill_step(self, now: float) -> int:
+        """Pump pending prefill chunks, round-robin across mid-prefill
+        slots, spending at most ``prefill.budget`` bucketed prompt tokens
+        (default: one chunk's worth) — the decode tick that follows keeps
+        running for every slot that already has tokens.  Returns the
+        bucketed token count actually spent."""
+        if not self._chunk:
+            return 0
+        pending = [i for i, s in enumerate(self.slots)
+                   if not s.done and not s.generated]
+        if not pending:
+            return 0
+        budget = self.ecfg.prefill.budget or self._chunk
+        # rotate the starting slot so equal-length prompts share the budget
+        # fairly instead of the lowest slot always going first
+        start = self._prefill_rr % len(pending)
+        ring = pending[start:] + pending[:start]
+        self._prefill_rr += 1
+        spent = 0
+        while ring and spent < budget:
+            i = ring.pop(0)
+            spent += self._prefill_chunk_into(i, now)
+            s = self.slots[i]
+            if not s.done and not s.generated:
+                ring.append(i)         # more chunks pending: back of line
+        return spent
+
+    def _prefill_chunk_into(self, slot_id: int, now: float) -> int:
+        """Run ONE prefill chunk for the slot: commit rows [pos, pos+L) of
+        the prompt through every stage's chunk program.  The final chunk
+        samples the first token (TTFT stamps here) and flips the slot into
+        decode; short requests whose budget is already spent finish
+        immediately, exactly like whole-prompt prefill."""
+        s = self.slots[slot_id]
+        req = s.request
+        S = len(s.prompt)
+        c0 = s.pos
+        L = min(self._chunk, S - c0)
+        Lb = self.executors.chunk_bucket(L, self._chunk)
+        Sp = self.executors.prefill_bucket(S)
+        final = c0 + L >= S
+        toks = np.zeros((1, Lb), np.int32)
+        toks[0, :L] = s.prompt[c0:c0 + L]
+        ranges = self._stage_ranges()
+        out = jnp.asarray(toks)
+        slot_ix = (jnp.asarray(self.block_tables[slot_id:slot_id + 1])
+                   if self.ecfg.paged else jnp.asarray(slot_id, jnp.int32))
+        pos0 = jnp.asarray(c0, jnp.int32)
+        last_ix = jnp.asarray(S - 1 - c0, jnp.int32)
+        memory = getattr(req, "memory", None)
+        for si, (lo, hi) in enumerate(ranges):
+            fn, _ = self.executors.chunk_prefill(
+                lo, hi, first=(si == 0), last=(si == len(ranges) - 1),
+                sample=final, chunk_len=Lb, kv_extent=Sp)
+            out, new = fn(self.params["blocks"][lo:hi],
+                          self.executors.head_params, out,
+                          self.caches[lo:hi], slot_ix, pos0, last_ix, memory)
+            self.caches[lo:hi] = new
+        s.pos = c0 + L
+        self.stats.bump("prefill_chunks")
+        if final:
+            first = int(np.asarray(out)[0])          # first sampled token
+            req.first_token = now                    # TTFT: this chunk
+            s.generated = [first]
+            eos = self.ecfg.eos_token
+            if s.budget <= 1 or (eos >= 0 and first == eos):
+                req.finish = now
+                self.stats.record(now, req.latency, req.met_slo,
+                                  queue_s=req.queue_wait,
+                                  ttft_s=req.first_token - req.arrival)
+                s.done = True
+                s.request = None
+                self._free_slot_blocks(slot_id)
+        return Lb
 
     def _prefill_into_slot(self, slot_id: int, req: Request,
                            now: float = 0.0) -> None:
-        cfg = self.cfg
-        prompt = np.asarray(req.prompt_tokens) if hasattr(req, "prompt_tokens") \
-            else np.arange(req.prompt_len) % cfg.vocab_size
-        # prompt + generated tokens must fit the cache: truncate the prompt
-        # first (keeping >= 1 token), then clamp the decode budget to the
-        # remaining rows so decode can never write past max_seq
-        prompt = prompt[: max(1, self.ecfg.max_seq - req.max_new_tokens - 1)]
+        prompt, budget = self._truncate_prompt(req)
         S = int(prompt.shape[0])
-        budget = min(req.max_new_tokens, self.ecfg.max_seq - S - 1)
         if self.ecfg.paged:
             # blocks for the prompt + the first decode write; bucket
             # padding beyond them scatters into the null block
@@ -832,12 +1125,22 @@ class FlexPipeEngine:
             # tail-block growth happens BEFORE the active mask is read:
             # a slot the pool can't grow is preempted and skips this tick
             self._ensure_decode_blocks(now)
-        active = np.array([not s.done for s in self.slots])
+        # mid-prefill slots (chunked: no sampled token yet) don't decode
+        active = np.array([not s.done and len(s.generated) > 0
+                           for s in self.slots])
         n_active = int(active.sum())
         if not n_active:
             return 0
         tok = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
+        if self._chunk:
+            # the fused tick writes a KV row for EVERY batch slot; park a
+            # mid-prefill slot's garbage write on its next chunk's first
+            # row (pos), which that chunk overwrites — never on row 0,
+            # where it would clobber the slot's committed chunk 0
+            for i, s in enumerate(self.slots):
+                if not s.done and not s.generated:
+                    pos[i] = s.pos
         for i in np.nonzero(active)[0]:
             s = self.slots[i]
             tok[i, 0] = s.generated[-1]
@@ -894,14 +1197,47 @@ class FlexPipeEngine:
         return np.asarray(jnp.argmax(logits, axis=-1))
 
     # ------------------------------------------------------------------
+    def step(self, now: float) -> TickReport:
+        """One full engine tick: fault policy -> admission maintenance ->
+        slot fill -> fault detection/recovery -> prefill chunks -> decode.
+
+        This is the typed driver the benchmarks and ``run()`` use; manual
+        loops that only need decode can keep calling ``decode_step``
+        (whole-prompt prefill still happens inside ``_admit``)."""
+        completed0 = self.stats.completed
+        self._apply_fault_policy(now)
+        if self.admission is not None:
+            # shed already-dead queued work even while slots are full,
+            # then advance the brownout controller on saturation
+            self.admission.expire(now)
+            self.admission.update(now)
+        admitted = self._admit(now)
+        recs = self.fault_step(now)
+        prefill_tokens = self._prefill_step(now)
+        t_tick = time.perf_counter()
+        decoded = self.decode_step(now)
+        self.health_step(now, time.perf_counter() - t_tick)
+        return TickReport(
+            now=now, decoded=decoded, prefill_tokens=prefill_tokens,
+            prefilling=sum(1 for s in self.slots
+                           if not s.done and not s.generated),
+            admitted=admitted,
+            completed=self.stats.completed - completed0,
+            queue_depth=len(self.queue), recoveries=len(recs))
+
     def run(self, requests: list[Request], controller=None,
             time_per_tick: float = 0.05) -> ServingStats:
         """Trace-driven loop in simulated time; controller may refactor."""
         pending = sorted(requests, key=lambda r: r.arrival)
         if self.admission is not None and self.admission.cost.auto:
-            # sim-time serving: a prefill costs one admission tick and
-            # decode one tick per token — seed the shedding cost model
-            self.admission.cost.seed_from_tick(time_per_tick)
+            # sim-time serving: a prefill costs one admission tick (or,
+            # chunked, budget-many prompt tokens per tick) and decode one
+            # tick per token — seed the shedding cost model
+            self.admission.cost.seed_from_tick(
+                time_per_tick,
+                prefill_tokens_per_tick=(
+                    (self.ecfg.prefill.budget or self._chunk)
+                    if self._chunk else 0))
         now = 0.0
         last_ctl = 0.0
         i = 0
@@ -912,17 +1248,7 @@ class FlexPipeEngine:
                 if controller is not None:
                     controller.on_request(pending[i].arrival)
                 i += 1
-            self._apply_fault_policy(now)
-            if self.admission is not None:
-                # shed already-dead queued work even while slots are full,
-                # then advance the brownout controller on saturation
-                self.admission.expire(now)
-                self.admission.update(now)
-            self._admit(now)
-            self.fault_step(now)
-            t_tick = time.perf_counter()
-            n = self.decode_step(now)
-            self.health_step(now, time.perf_counter() - t_tick)
+            self.step(now)
             if controller is not None and now - last_ctl >= self.ecfg.control_interval:
                 last_ctl = now
                 sat = self.admission.saturation() \

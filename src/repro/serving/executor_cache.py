@@ -199,6 +199,71 @@ def _stage_prefill_fn(cfg: ModelConfig, lo: int, hi: int, max_seq: int,
     return jax.jit(prefill, donate_argnums=(3,))
 
 
+def _chunk_prefill_fn(cfg: ModelConfig, lo: int, hi: int, max_seq: int,
+                      dtype, first: bool, last: bool, sample: bool,
+                      chunk_len: int, kv_extent: int, paged: bool = False):
+    """One prefill *chunk* over layers [lo, hi): ``chunk_len`` tokens are
+    committed at a runtime offset ``pos0`` and attend over cache rows
+    [0, ``kv_extent``) — all previously committed chunks plus this one.
+
+    ``kv_extent`` is the whole prompt's pow2 bucket, so every chunk of a
+    prompt reduces attention over the same extent a whole-prompt prefill
+    would: greedy outputs stay bit-identical (unwritten rows past the
+    prefix are causally masked and contribute exact zeros).  ``pos0`` is a
+    traced scalar, so one program serves every chunk index of a given
+    (chunk_len, kv_extent) shape.  ``sample`` adds lm_head + argmax on the
+    row ``last_ix`` (the prompt's final token, chunk-relative) — set only
+    on the final chunk's last stage.
+    """
+
+    if paged:
+        def chunk(blocks, extras, inp, caches, block_row, pos0, last_ix,
+                  memory):
+            _note_trace()
+            x = embed_tokens(cfg, extras, inp, pos0=pos0) if first else inp
+            new = []
+            for i, bp in enumerate(blocks):
+                li = lo + i
+                ctx = BlockCtx(pos0=pos0, cache=caches[i], memory=memory,
+                               is_global=cfg.is_global_layer(li),
+                               block_table=block_row, kv_extent=kv_extent)
+                x, nc, _ = apply_block(cfg, cfg.layer_kind(li), bp, x, ctx)
+                new.append(nc)
+            if last and sample:
+                xl = jax.lax.dynamic_slice_in_dim(x, last_ix, 1, axis=1)
+                tok = jnp.argmax(lm_head(cfg, extras, xl)[:, -1, :], axis=-1)
+                return tok.astype(jnp.int32), new
+            return x, new
+
+        return jax.jit(chunk, donate_argnums=(3,))
+
+    def chunk(blocks, extras, inp, caches, slot, pos0, last_ix, memory):
+        _note_trace()
+        x = embed_tokens(cfg, extras, inp, pos0=pos0) if first else inp
+        out = []
+        for i, bp in enumerate(blocks):
+            li = lo + i
+            # batch-1 view of this slot's rows; the chunked attention path
+            # reads committed rows [0, kv_extent) and writes [pos0, pos0+S)
+            sub = jax.tree.map(
+                lambda c: jax.lax.dynamic_slice(
+                    c, (slot,) + (0,) * (c.ndim - 1), (1,) + c.shape[1:]),
+                caches[i])
+            ctx = BlockCtx(pos0=pos0, cache=sub, memory=memory,
+                           is_global=cfg.is_global_layer(li),
+                           kv_extent=kv_extent)
+            x, nc, _ = apply_block(cfg, cfg.layer_kind(li), bp, x, ctx)
+            out.append(jax.tree.map(lambda d, s: _slot_write(d, s, slot),
+                                    caches[i], nc))
+        if last and sample:
+            xl = jax.lax.dynamic_slice_in_dim(x, last_ix, 1, axis=1)
+            tok = jnp.argmax(lm_head(cfg, extras, xl)[:, -1, :], axis=-1)
+            return tok.astype(jnp.int32), out
+        return x, out
+
+    return jax.jit(chunk, donate_argnums=(3,))
+
+
 def _stage_decode_fn(cfg: ModelConfig, lo: int, hi: int):
     """Per-stage decode tick (the unfused fallback path)."""
 
@@ -281,6 +346,15 @@ class ExecutorCache:
         # false for recurrent state (SSM) and ring (sliding-window) caches
         self.can_bucket = (prefill_buckets and not cfg.sliding_window
                            and mixers <= {MIXER_ATTN, MIXER_MLA, MIXER_CROSS})
+        # chunked prefill replays chunk n's attention over the cache rows of
+        # chunks 0..n-1, so cached rows must hold bit-exact copies of the
+        # fresh activations: float32 caches only (a bf16 round-trip breaks
+        # greedy parity with whole-prompt prefill), plain attention only
+        # (MLA/cross/SSM caches have no chunk-resume path)
+        self.can_chunk = (self.can_bucket and mixers == {MIXER_ATTN}
+                          and self.cache_dtype == jnp.float32
+                          and not any(cfg.layer_kind(i).extra_cross
+                                      for i in range(cfg.n_layers)))
 
     # -- bucketing ---------------------------------------------------------
     def prefill_bucket(self, n: int) -> int:
@@ -291,6 +365,14 @@ class ExecutorCache:
         while b < n:
             b *= 2
         return min(b, self.max_seq)
+
+    def chunk_bucket(self, n: int, chunk: int) -> int:
+        """Pow2 bucket for a chunk's token count, capped at the chunk size
+        (the final, partial chunk of a prompt pads to the next pow2)."""
+        b = 16
+        while b < n:
+            b *= 2
+        return min(b, chunk)
 
     # -- lookups -----------------------------------------------------------
     def _lookup(self, key, builder):
@@ -344,6 +426,22 @@ class ExecutorCache:
         return self._lookup(key, lambda: _shared(
             skey, lambda: _stage_prefill_fn(self.cfg, lo, hi, self.max_seq,
                                             self.cache_dtype, first, last,
+                                            paged=self.paged)))
+
+    def chunk_prefill(self, lo: int, hi: int, *, first: bool, last: bool,
+                      sample: bool, chunk_len: int, kv_extent: int):
+        """Chunked-prefill program for one stage; ``sample`` only matters on
+        the last stage (lm_head + argmax of the prompt's final row), so it
+        is masked off elsewhere to maximize program sharing."""
+        sample = bool(sample and last)
+        key = ("chunk", lo, hi, first, last, sample, chunk_len, kv_extent)
+        skey = (self.cfg, "chunk", lo, hi, self.max_seq,
+                self.cache_dtype.name, first, last, sample, chunk_len,
+                kv_extent, self.paged)
+        return self._lookup(key, lambda: _shared(
+            skey, lambda: _chunk_prefill_fn(self.cfg, lo, hi, self.max_seq,
+                                            self.cache_dtype, first, last,
+                                            sample, chunk_len, kv_extent,
                                             paged=self.paged)))
 
     def stage_decode(self, lo: int, hi: int):

@@ -59,6 +59,25 @@ def test_flash_blockshape_invariance(bq, bk, sq, extra):
                                atol=3e-5, rtol=3e-5)
 
 
+@pytest.mark.parametrize("c0,L", [(0, 32), (32, 32), (96, 32), (64, 17)])
+def test_flash_q_offset_matches_full_rows(c0, L):
+    """Chunked prefill contract: rows [c0, c0+L) computed with an explicit
+    q_offset over the full KV span equal the same rows of a whole-prompt
+    pass.  (Default q_offset=None keeps the legacy END-alignment
+    ``Skv - Sq``, covered by the sweep above.)"""
+    S = 128
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, S, 4, 32))
+    k = jax.random.normal(ks[1], (1, S, 2, 32))
+    v = jax.random.normal(ks[2], (1, S, 2, 32))
+    full = flash_attention(q, k, v, causal=True, block_q=32, block_k=64)
+    chunk = flash_attention(q[:, c0:c0 + L], k, v, causal=True,
+                            q_offset=c0, block_q=32, block_k=64)
+    np.testing.assert_allclose(np.asarray(chunk),
+                               np.asarray(full)[:, c0:c0 + L],
+                               atol=3e-5, rtol=3e-5)
+
+
 # ---------------------------------------------------------------------------
 # decode attention
 # ---------------------------------------------------------------------------

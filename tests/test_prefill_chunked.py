@@ -1,0 +1,301 @@
+"""Chunked continuous-batching prefill: bit-exactness, scheduling fairness,
+and the restructured config/submission API.
+
+The load-bearing property is that chunked prefill is *invisible* to the
+sampler: greedy token streams must equal whole-prompt prefill exactly —
+dense and paged, through an inflight refactor landed mid-prefill, and
+through an emergency fault recovery whose Eq. 10 restore + delta replay
+crosses a half-prefilled slot.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models.transformer import init_model
+from repro.serving.admission import (AdmissionConfig, CostModel,
+                                     PRIO_BATCH, PRIO_INTERACTIVE)
+from repro.serving.engine import (EngineConfig, FlexPipeEngine, KVCacheConfig,
+                                  PrefillConfig, balanced_boundaries)
+from repro.serving.workload import Request
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_arch("qwen1.5-0.5b").smoke_config
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(model, *, chunk=0, paged=False, paged_kernel=False, max_batch=4,
+            max_seq=64, block_size=8, snapshot_interval=0, budget=0,
+            admission=None, n_blocks=0):
+    cfg, params = model
+    ecfg = EngineConfig(max_batch=max_batch, max_seq=max_seq,
+                        kv=KVCacheConfig(paged=paged, block_size=block_size,
+                                         paged_kernel=paged_kernel,
+                                         n_blocks=n_blocks),
+                        prefill=PrefillConfig(chunk=chunk, budget=budget),
+                        snapshot_interval=snapshot_interval,
+                        admission=admission)
+    return FlexPipeEngine(cfg, params,
+                          balanced_boundaries(cfg.n_layers, 2), ecfg)
+
+
+def _run(model, chunk, *, paged=False, paged_kernel=False, steps=200,
+         refactor_at=None, fail_at=None, prompts=(48, 9, 33), n_req=4,
+         max_new=10):
+    """Drain a small workload; returns per-rid greedy streams + engine."""
+    eng = _engine(model, chunk=chunk, paged=paged, paged_kernel=paged_kernel,
+                  snapshot_interval=4 if fail_at is not None else 0)
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=prompts[i % len(prompts)],
+                    max_new_tokens=max_new) for i in range(n_req)]
+    for r in reqs:
+        assert eng.submit(r, now=0.0).accepted
+    hist, now = {}, 0.0
+    for t in range(steps):
+        if refactor_at is not None and t == refactor_at:
+            eng.refactor([0, 1, 3])
+        if fail_at is not None and t == fail_at:
+            eng._dead.add(0)            # stage 0 dies mid-flight
+        eng.step(now)
+        for s in eng.slots:
+            if s.request is not None and s.generated:
+                hist[s.request.rid] = list(s.generated)
+        now += 0.05
+        if not len(eng.queue) and all(s.done for s in eng.slots):
+            break
+    assert eng.stats.completed == n_req
+    return hist, eng
+
+
+@pytest.fixture(scope="module")
+def whole_prompt_streams(model):
+    hist, _ = _run(model, 0)
+    return hist
+
+
+# ---------------------------------------------------------------- parity
+
+def test_chunked_matches_whole_dense(model, whole_prompt_streams):
+    hist, eng = _run(model, 16)
+    assert eng.stats.counters["prefill_chunks"] >= 6   # 48->3, 33->3 chunks
+    assert hist == whole_prompt_streams
+
+
+def test_chunked_matches_whole_paged(model, whole_prompt_streams):
+    hist, _ = _run(model, 16, paged=True)
+    assert hist == whole_prompt_streams
+
+
+def test_chunked_matches_whole_paged_kernel(model, whole_prompt_streams):
+    hist, _ = _run(model, 16, paged=True, paged_kernel=True)
+    assert hist == whole_prompt_streams
+
+
+def test_chunked_parity_across_refactor(model, whole_prompt_streams):
+    # the refactor lands while the 48-token prompt is mid-prefill (tick 1-2)
+    for ra in (1, 2):
+        for paged in (False, True):
+            hist, _ = _run(model, 16, paged=paged, refactor_at=ra)
+            assert hist == whole_prompt_streams, (ra, paged)
+
+
+def test_chunked_parity_across_fault_replay(model, whole_prompt_streams):
+    # stage death at tick 1 catches slots mid-prefill; the Eq. 10 restore +
+    # delta replay must rebuild half-written caches bit-exactly
+    for fa in (1, 6):
+        for paged in (False, True):
+            hist, eng = _run(model, 16, paged=paged, fail_at=fa)
+            assert eng.stats.counters.get("emergency_refactors", 0) >= 1
+            assert hist == whole_prompt_streams, (fa, paged)
+
+
+def test_chunk_fallback_warns_on_unchunkable_arch(model):
+    cfg, params = model
+    ecfg = EngineConfig(max_batch=2, max_seq=64, cache_dtype="bfloat16",
+                        prefill=PrefillConfig(chunk=16))
+    with pytest.warns(UserWarning, match="falling back to whole-prompt"):
+        eng = FlexPipeEngine(cfg, params,
+                             balanced_boundaries(cfg.n_layers, 2), ecfg)
+    assert eng._chunk == 0
+
+
+# ------------------------------------------------------------- scheduling
+
+def test_chunk_round_robin_fairness(model):
+    """Two equal long prompts must interleave chunk-for-chunk: neither
+    prefill cursor ever runs more than one chunk ahead of the other."""
+    eng = _engine(model, chunk=16, budget=16)   # one chunk per tick total
+    for i in range(2):
+        assert eng.submit(Request(rid=i, arrival=0.0, prompt_len=48,
+                                  max_new_tokens=4), now=0.0).accepted
+    gaps = []
+    for t in range(40):
+        eng.step(0.05 * t)
+        cursors = [s.pos for s in eng.slots
+                   if s.request is not None and not s.generated]
+        if len(cursors) == 2:
+            gaps.append(abs(cursors[0] - cursors[1]))
+        if all(s.done for s in eng.slots) and not len(eng.queue):
+            break
+    assert gaps, "both prompts should spend ticks prefilling concurrently"
+    assert max(gaps) <= 16
+    assert eng.stats.completed == 2
+
+
+def test_decode_progresses_during_long_prefill(model):
+    """The tentpole behaviour: a decoding slot keeps emitting tokens while
+    another slot's long prompt is still prefilling."""
+    eng = _engine(model, chunk=16)
+    assert eng.submit(Request(rid=0, arrival=0.0, prompt_len=9,
+                              max_new_tokens=30), now=0.0).accepted
+    eng.step(0.0)                       # rid 0 through prefill into decode
+    long_req = Request(rid=1, arrival=0.0, prompt_len=48, max_new_tokens=4)
+    assert eng.submit(long_req, now=0.0).accepted
+    decoded_during = 0
+    prefill_ticks = 0
+    for t in range(20):
+        rep = eng.step(0.05 * (t + 1))
+        if rep.prefilling:
+            prefill_ticks += 1
+            decoded_during += rep.decoded
+        if long_req.first_token >= 0:
+            break
+    assert prefill_ticks >= 2            # 48 tokens / 16-chunk = 3 ticks
+    assert decoded_during > 0
+
+
+def test_ttft_at_final_chunk(model):
+    """TTFT must be stamped at the tick whose chunk emits the first token,
+    not at admission."""
+    eng = _engine(model, chunk=16)
+    req = Request(rid=0, arrival=0.0, prompt_len=48, max_new_tokens=4)
+    assert eng.submit(req, now=0.0).accepted
+    ticks_to_first = None
+    for t in range(10):
+        eng.step(float(t))
+        if req.first_token >= 0:
+            ticks_to_first = t
+            break
+    assert ticks_to_first == 2           # chunks at ticks 0,1; token at 2
+    assert req.first_token == 2.0
+
+
+# ----------------------------------------------------- preemption victim
+
+def test_pick_victim_prefers_lowest_priority(model):
+    eng = _engine(model, paged=True, max_batch=2, n_blocks=16)
+    hi = Request(rid=0, arrival=0.0, prompt_len=12, max_new_tokens=10,
+                 priority=PRIO_INTERACTIVE)
+    lo = Request(rid=1, arrival=0.0, prompt_len=12, max_new_tokens=10,
+                 priority=PRIO_BATCH)
+    assert eng.submit(hi, now=0.0).accepted
+    assert eng.submit(lo, now=0.0).accepted
+    eng.step(0.0)
+    live = {eng.slots[i].request.rid for i in range(2) if not eng.slots[i].done}
+    assert live == {0, 1}
+    victim = eng._pick_victim()
+    assert eng.slots[victim].request.rid == 1   # the batch-class request
+
+
+def test_preemption_evicts_batch_class_first(model):
+    """Exhaust the pool mid-decode: the batch request is preempted and
+    requeued; the interactive request streams on and finishes first; both
+    complete."""
+    # prompt 12 -> 2 blocks of 8 at admit; growth past row 16 needs a 3rd.
+    # Pool of 4 usable blocks seats both (2+2) with nothing spare.
+    eng = _engine(model, paged=True, max_batch=2, n_blocks=5)
+    hi = Request(rid=0, arrival=0.0, prompt_len=12, max_new_tokens=10,
+                 priority=PRIO_INTERACTIVE)
+    lo = Request(rid=1, arrival=0.0, prompt_len=12, max_new_tokens=10,
+                 priority=PRIO_BATCH)
+    assert eng.submit(hi, now=0.0).accepted
+    assert eng.submit(lo, now=0.0).accepted
+    for t in range(200):
+        eng.step(0.05 * t)
+        if not len(eng.queue) and all(s.done for s in eng.slots):
+            break
+    assert eng.stats.completed == 2
+    assert eng.stats.counters.get("paged_preemptions", 0) >= 1
+    assert hi.finish < lo.finish         # interactive was never the victim
+
+
+# ----------------------------------------------------- config & submit API
+
+def test_legacy_flat_kwargs_warn_and_forward(model):
+    with pytest.warns(DeprecationWarning, match="paged"):
+        ecfg = EngineConfig(max_batch=2, paged=True, block_size=8)
+    assert ecfg.kv.paged and ecfg.kv.block_size == 8
+    assert ecfg.paged and ecfg.block_size == 8     # read-only shims
+    with pytest.warns(DeprecationWarning, match="prefill_chunk"):
+        ecfg = EngineConfig(max_seq=64, prefill_chunk=16)
+    assert ecfg.prefill.chunk == 16
+    with pytest.warns(DeprecationWarning, match="prefill_buckets"):
+        ecfg = EngineConfig(prefill_buckets=False)
+    assert ecfg.prefill.buckets is False
+
+
+def test_unknown_kwarg_rejected():
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        EngineConfig(max_batch=2, page_size=16)
+
+
+def test_chunk_validation():
+    with pytest.raises(ValueError, match="power of two"):
+        EngineConfig(max_seq=96, prefill=PrefillConfig(chunk=24))
+    with pytest.raises(ValueError, match="power of two"):
+        EngineConfig(max_seq=64, prefill=PrefillConfig(chunk=8))
+    with pytest.raises(ValueError, match="multiple"):
+        EngineConfig(max_seq=100, prefill=PrefillConfig(chunk=16))
+    EngineConfig(max_seq=96, prefill=PrefillConfig(chunk=32))  # 96 = 3*32
+
+
+def test_submit_result(model):
+    eng = _engine(model, max_batch=2)
+    res = eng.submit(Request(rid=0, arrival=0.0, prompt_len=8,
+                             max_new_tokens=4), now=0.0)
+    assert res.accepted and bool(res)
+    assert res.queue_depth == 1
+
+
+def test_submit_result_rejection(model):
+    eng = _engine(model, max_batch=1,
+                  admission=AdmissionConfig(max_queue_depth=1))
+    r0 = eng.submit(Request(rid=0, arrival=0.0, prompt_len=8,
+                            max_new_tokens=4), now=0.0)
+    r1 = eng.submit(Request(rid=1, arrival=0.0, prompt_len=8,
+                            max_new_tokens=4), now=0.0)
+    assert r0.accepted
+    assert not r1.accepted and not bool(r1)
+    assert r1.reason == "queue_full"
+
+
+def test_tick_report_fields(model):
+    eng = _engine(model, chunk=16)
+    assert eng.submit(Request(rid=0, arrival=0.0, prompt_len=33,
+                              max_new_tokens=3), now=0.0).accepted
+    rep = eng.step(0.0)
+    assert rep.admitted == 1
+    assert rep.prefill_tokens > 0        # first chunk ran this tick
+    assert rep.prefilling == 1           # 33 > 16: still mid-prefill
+    assert rep.queue_depth == 0
+    reps = [rep]
+    for t in range(1, 30):
+        reps.append(eng.step(0.05 * t))
+        if all(s.done for s in eng.slots):
+            break
+    assert sum(r.completed for r in reps) == 1
+    assert sum(r.decoded for r in reps) >= 2
+
+
+def test_cost_model_seeds_chunked_prefill_rate():
+    cm = CostModel()
+    cm.seed_from_tick(0.1, prefill_tokens_per_tick=16)
+    assert cm.prefill_s_per_token == pytest.approx(0.1 / 16)
+    cm2 = CostModel.from_tick(0.1)       # whole-prompt: legacy seeding
+    assert cm2.prefill_s_per_token >= 0.0
