@@ -1,0 +1,23 @@
+"""FlexPipe-aware static analyzer (JIT-boundary / Pallas / pipeline rules).
+
+Programmatic entry points::
+
+    from repro.analysis import analyze_paths, analyze_source
+    report = analyze_paths(["src/repro"])
+
+CLI: ``python -m repro.analysis --help``.
+"""
+from repro.analysis.findings import (ALL_RULES, Finding, Report,
+                                     Suppression, parse_suppressions)
+from repro.analysis.registry import Rule, all_rules, get_rule, rule, \
+    select_rules
+from repro.analysis.runner import (EXCLUDE_DIRS, FileContext,
+                                   analyze_paths, analyze_source,
+                                   iter_python_files)
+
+__all__ = [
+    "ALL_RULES", "EXCLUDE_DIRS", "FileContext", "Finding", "Report",
+    "Rule", "Suppression", "all_rules", "analyze_paths", "analyze_source",
+    "get_rule", "iter_python_files", "parse_suppressions", "rule",
+    "select_rules",
+]

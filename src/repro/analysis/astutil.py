@@ -1,0 +1,372 @@
+"""Shared AST helpers for the analyzer's rule packs.
+
+Everything here is purely syntactic — the analyzer never imports the code
+it inspects.  The helpers encode the codebase's idioms (executor-cache
+program builders, ``pl.pallas_call`` invocation shapes, ``functools.partial``
+kernels) so the rules stay short.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+
+# ---------------------------------------------------------------------------
+# names / structure
+# ---------------------------------------------------------------------------
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def callee(node: ast.Call) -> Optional[str]:
+    return dotted(node.func)
+
+
+def callee_is(node: ast.Call, *names: str) -> bool:
+    """True when the call's dotted callee matches or ends with any name
+    (``jax.jit`` matches both ``jax.jit`` and bare ``jit`` aliases)."""
+    c = callee(node)
+    if c is None:
+        return False
+    return any(c == n or c.endswith("." + n) for n in names)
+
+
+def build_parents(root: ast.AST) -> dict[ast.AST, ast.AST]:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(root):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def enclosing(node: ast.AST, parents: dict, *types) -> Optional[ast.AST]:
+    """Nearest ancestor of one of the given AST types (excludes node)."""
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, types):
+            return cur
+        cur = parents.get(cur)
+    return None
+
+
+def iter_functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def module_functions(tree: ast.AST) -> dict[str, ast.FunctionDef]:
+    """All function defs anywhere in the module, keyed by name (last one
+    wins on collision — fine for this codebase's naming discipline)."""
+    return {fn.name: fn for fn in iter_functions(tree)}
+
+
+def positional_params(fn: ast.FunctionDef) -> list[str]:
+    return [a.arg for a in (*fn.args.posonlyargs, *fn.args.args)]
+
+
+def kwonly_params(fn: ast.FunctionDef) -> list[str]:
+    return [a.arg for a in fn.args.kwonlyargs]
+
+
+def const_int(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    return None
+
+
+def str_tuple(node: ast.AST) -> Optional[tuple[str, ...]]:
+    """('a', 'b') for a tuple/list of string constants (or a single str)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+                return None
+            out.append(e.value)
+        return tuple(out)
+    return None
+
+
+def int_tuple(node: ast.AST) -> Optional[tuple[int, ...]]:
+    if (v := const_int(node)) is not None:
+        return (v,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            v = const_int(e)
+            if v is None:
+                return None
+            out.append(v)
+        return tuple(out)
+    return None
+
+
+def kwarg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def assign_targets(stmt: ast.stmt) -> list[ast.AST]:
+    if isinstance(stmt, ast.Assign):
+        out = []
+        for t in stmt.targets:
+            out.extend(t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t])
+        return out
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        return [stmt.target]
+    return []
+
+
+def local_env(fn: ast.FunctionDef) -> dict[str, ast.AST]:
+    """name -> last RHS expression for simple single-target assignments in
+    the function body (lexical order; nested defs skipped)."""
+    env: dict[str, ast.AST] = {}
+
+    def walk(body):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                env[stmt.targets[0].id] = stmt.value
+            for attr in ("body", "orelse", "finalbody"):
+                walk(getattr(stmt, attr, []) or [])
+    walk(fn.body)
+    return env
+
+
+def resolve_name(node: ast.AST, env: dict[str, ast.AST],
+                 depth: int = 4) -> ast.AST:
+    """Chase Name -> env assignment a few hops (cycle-safe)."""
+    seen = set()
+    while isinstance(node, ast.Name) and node.id in env \
+            and node.id not in seen and depth > 0:
+        seen.add(node.id)
+        node = env[node.id]
+        depth -= 1
+    return node
+
+
+# ---------------------------------------------------------------------------
+# traced-function discovery (jit targets and Pallas kernels)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TracedFn:
+    fn: ast.FunctionDef
+    kind: str                       # "jit" | "kernel"
+    static_names: set = field(default_factory=set)
+    static_nums: set = field(default_factory=set)
+
+    def traced_params(self) -> list[str]:
+        """Positional parameter names that are tracers at runtime."""
+        pos = positional_params(self.fn)
+        if pos and pos[0] in ("self", "cls"):
+            pos = pos[1:]
+        return [p for i, p in enumerate(pos)
+                if p not in self.static_names and i not in self.static_nums]
+
+
+def _jit_statics(call: ast.Call) -> tuple[set, set]:
+    names: set = set()
+    nums: set = set()
+    if (sn := kwarg(call, "static_argnames")) is not None:
+        names |= set(str_tuple(sn) or ())
+    if (si := kwarg(call, "static_argnums")) is not None:
+        nums |= set(int_tuple(si) or ())
+    return names, nums
+
+
+def _is_jit(node: ast.AST) -> Optional[ast.Call]:
+    """The jit-configuring Call for ``jax.jit``/``jit`` or
+    ``[functools.]partial(jax.jit, ...)`` expressions; else None."""
+    if isinstance(node, ast.Call):
+        if callee_is(node, "jax.jit") or callee(node) == "jit":
+            return node
+        if callee_is(node, "partial") and node.args \
+                and isinstance(node.args[0], (ast.Name, ast.Attribute)) \
+                and (dotted(node.args[0]) or "").endswith("jit"):
+            return node
+    if isinstance(node, (ast.Name, ast.Attribute)) \
+            and (dotted(node) or "") in ("jit", "jax.jit"):
+        return ast.Call(func=node, args=[], keywords=[])
+    return None
+
+
+def find_traced_functions(tree: ast.AST) -> list[TracedFn]:
+    """Every function the analyzer treats as traced:
+
+    * decorated with ``@jax.jit`` / ``@partial(jax.jit, ...)``;
+    * passed to a ``jax.jit(fn, ...)`` call, directly or through ONE
+      wrapper hop (``fn = wrapper(step, ...); jax.jit(fn, ...)`` — the
+      shard_map idiom);
+    * a Pallas kernel: first argument of ``pl.pallas_call`` (directly or
+      via ``functools.partial(kernel, ...)``).
+    """
+    fns = module_functions(tree)
+    out: dict[str, TracedFn] = {}
+
+    def add(fn, kind, statics=(set(), set())):
+        if fn.name not in out:
+            out[fn.name] = TracedFn(fn, kind, statics[0], statics[1])
+
+    for fn in fns.values():
+        for deco in fn.decorator_list:
+            jc = _is_jit(deco)
+            if jc is not None:
+                add(fn, "jit", _jit_statics(jc))
+
+    # env of simple assignments per enclosing function scope + module
+    envs = [
+        {t.targets[0].id: t.value for t in ast.walk(tree)
+         if isinstance(t, ast.Assign) and len(t.targets) == 1
+         and isinstance(t.targets[0], ast.Name)}
+    ]
+
+    def target_fn(node: ast.AST, hops: int = 2) -> Optional[ast.FunctionDef]:
+        node = resolve_name(node, envs[0])
+        if isinstance(node, ast.Name) and node.id in fns:
+            return fns[node.id]
+        if isinstance(node, ast.Call) and node.args and hops > 0:
+            # one wrapper hop: fn = _shard_map(step, ...) -> step
+            return target_fn(node.args[0], hops - 1)
+        return None
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if callee_is(node, "jax.jit") or callee(node) == "jit":
+            if node.args and (fn := target_fn(node.args[0])) is not None:
+                add(fn, "jit", _jit_statics(node))
+        elif callee_is(node, "pallas_call"):
+            if node.args and (fn := target_fn(node.args[0])) is not None:
+                add(fn, "kernel")
+    return list(out.values())
+
+
+# ---------------------------------------------------------------------------
+# pallas_call site model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PallasSite:
+    call: ast.Call                       # the pl.pallas_call(...) call
+    outer: Optional[ast.Call]            # pl.pallas_call(...)(operands)
+    kernel: Optional[ast.FunctionDef]
+    grid: Optional[ast.AST]              # grid tuple expression
+    n_prefetch: int
+    in_specs: list                       # BlockSpec Call nodes (or None)
+    out_specs: list
+    n_out: int
+    n_scratch: int
+    env: dict                            # enclosing function's local env
+
+    def operands(self) -> list[ast.AST]:
+        return list(self.outer.args) if self.outer is not None else []
+
+
+def _spec_list(node: Optional[ast.AST]) -> tuple[list, int]:
+    """(BlockSpec call nodes, count) for an in_specs/out_specs expression.
+    A single BlockSpec counts as one spec."""
+    if node is None:
+        return [], 0
+    if isinstance(node, (ast.List, ast.Tuple)):
+        specs = [e if isinstance(e, ast.Call) and callee_is(e, "BlockSpec")
+                 else None for e in node.elts]
+        return specs, len(node.elts)
+    if isinstance(node, ast.Call) and callee_is(node, "BlockSpec"):
+        return [node], 1
+    return [None], 1
+
+
+def find_pallas_sites(tree: ast.AST) -> list[PallasSite]:
+    fns = module_functions(tree)
+    parents = build_parents(tree)
+    sites = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and callee_is(node, "pallas_call")):
+            continue
+        outer = parents.get(node)
+        outer = outer if (isinstance(outer, ast.Call)
+                          and outer.func is node) else None
+        owner = enclosing(node, parents, ast.FunctionDef,
+                          ast.AsyncFunctionDef)
+        env = local_env(owner) if owner is not None else {}
+
+        grid = kwarg(node, "grid")
+        n_prefetch = 0
+        in_specs_node = kwarg(node, "in_specs")
+        out_specs_node = kwarg(node, "out_specs")
+        scratch_node = kwarg(node, "scratch_shapes")
+        gs = kwarg(node, "grid_spec")
+        if gs is not None:
+            gs = resolve_name(gs, env)
+            if isinstance(gs, ast.Call):
+                grid = kwarg(gs, "grid") or grid
+                if (np_ := kwarg(gs, "num_scalar_prefetch")) is not None:
+                    n_prefetch = const_int(np_) or 0
+                in_specs_node = kwarg(gs, "in_specs") or in_specs_node
+                out_specs_node = kwarg(gs, "out_specs") or out_specs_node
+                scratch_node = kwarg(gs, "scratch_shapes") or scratch_node
+
+        kern = None
+        if node.args:
+            k = resolve_name(node.args[0], env)
+            if isinstance(k, ast.Call) and callee_is(k, "partial") and k.args:
+                k = resolve_name(k.args[0], env)
+            name = dotted(k)
+            if name and name.split(".")[-1] in fns:
+                kern = fns[name.split(".")[-1]]
+
+        in_specs, _ = _spec_list(in_specs_node)
+        out_specs, n_out = _spec_list(out_specs_node)
+        scratch = resolve_name(scratch_node, env) \
+            if scratch_node is not None else None
+        n_scratch = (len(scratch.elts)
+                     if isinstance(scratch, (ast.List, ast.Tuple)) else
+                     (1 if scratch is not None else 0))
+        sites.append(PallasSite(
+            call=node, outer=outer, kernel=kern, grid=grid,
+            n_prefetch=n_prefetch, in_specs=in_specs, out_specs=out_specs,
+            n_out=n_out, n_scratch=n_scratch, env=env))
+    return sites
+
+
+def blockspec_parts(spec: Optional[ast.Call]):
+    """(block_shape_tuple_node, index_map_lambda) from a BlockSpec call
+    (either may be None)."""
+    if spec is None:
+        return None, None
+    shape = spec.args[0] if spec.args else kwarg(spec, "block_shape")
+    imap = (spec.args[1] if len(spec.args) > 1
+            else kwarg(spec, "index_map"))
+    if not isinstance(shape, (ast.Tuple, ast.List)):
+        shape = None
+    if not isinstance(imap, ast.Lambda):
+        imap = None
+    return shape, imap
+
+
+def lambda_params(lam: ast.Lambda) -> tuple[list[str], list[str]]:
+    """(required positional params, defaulted params) of a lambda."""
+    names = [a.arg for a in (*lam.args.posonlyargs, *lam.args.args)]
+    nd = len(lam.args.defaults)
+    if nd:
+        return names[:-nd], names[-nd:]
+    return names, []

@@ -1,0 +1,521 @@
+"""JIT-boundary rules (JIT1xx): tracing, host syncs, donation discipline.
+
+These rules encode the engine's zero-retrace / one-sync-per-tick contract:
+the fused decode tick dispatches once, donates its caches, and brings back
+exactly one B-int32 token batch.  Anything else — Python control flow on
+tracers, stray ``np.asarray`` syncs, re-jitting in a loop, reading a buffer
+after donating it — either breaks under trace or silently serializes the
+hot path.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, Optional
+
+from repro.analysis import astutil as au
+from repro.analysis.findings import Finding
+from repro.analysis.registry import rule
+
+# Executor-cache lookup methods -> donate_argnums of the program they
+# return (see serving/executor_cache.py).  ``fused_decode`` returns a
+# program object whose ``.step`` donates its caches (position 0).
+FLEXPIPE_DONATIONS = {
+    "stage_prefill": (3,),
+    "chunk_prefill": (3,),
+    "stage_decode": (2,),
+}
+#: attribute bases whose ``.step(caches, ...)`` donates position 0
+FUSED_BASE_MARKERS = ("fused", "prog")
+
+_STATIC_ATTRS = {"ndim", "shape", "dtype", "size", "sharding", "aval",
+                 "weak_type"}
+_STATIC_CALLS = {"len", "isinstance", "type", "hasattr", "getattr"}
+
+
+def _own_statements(fn: ast.FunctionDef) -> Iterator[ast.stmt]:
+    """Statements of ``fn`` in lexical order, not descending into nested
+    function/class definitions (those are analyzed as their own scopes)."""
+    def walk(body):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            yield stmt
+            for attr in ("body", "orelse", "finalbody"):
+                yield from walk(getattr(stmt, attr, []) or [])
+            for h in getattr(stmt, "handlers", []) or []:
+                yield from walk(h.body)
+    yield from walk(fn.body)
+
+
+def _stmt_exprs(stmt: ast.stmt) -> Iterator[ast.AST]:
+    """All expression nodes belonging to ``stmt`` itself (its test/value/
+    targets), NOT to statements nested inside its body — pairs with
+    :func:`_own_statements` to visit every expression exactly once with
+    the correct immediate statement."""
+    for child in ast.iter_child_nodes(stmt):
+        if isinstance(child, ast.expr):
+            yield from ast.walk(child)
+
+
+# ---------------------------------------------------------------------------
+# JIT101 — Python branching on traced values
+# ---------------------------------------------------------------------------
+
+def _exempt_use(name_node: ast.Name, test: ast.AST,
+                parents: dict) -> bool:
+    """Static uses of a traced param that don't branch on runtime values:
+    shape/dtype introspection, None checks, membership of a literal key,
+    len()/isinstance() and friends."""
+    cur: ast.AST = name_node
+    while cur is not test:
+        par = parents.get(cur)
+        if par is None:
+            break
+        if isinstance(par, ast.Attribute) and par.attr in _STATIC_ATTRS:
+            return True
+        if isinstance(par, ast.Call) and au.callee(par) in _STATIC_CALLS:
+            return True
+        if isinstance(par, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in par.ops):
+                return True
+            # "key" in traced_dict — membership of a literal is static
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in par.ops) \
+                    and isinstance(par.left, ast.Constant):
+                return True
+        cur = par
+    return False
+
+
+@rule("JIT101", "traced-branch",
+      "Python `if`/`while` on a traced value inside a jitted function or "
+      "Pallas kernel",
+      hint="branch with jnp.where / jax.lax.cond, or mark the argument "
+           "static (static_argnames)")
+def check_traced_branch(ctx) -> Iterable[Finding]:
+    for tf in ctx.traced:
+        traced = set(tf.traced_params())
+        if not traced:
+            continue
+        for node in ast.walk(tf.fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            tparents = au.build_parents(node.test)
+            for sub in ast.walk(node.test):
+                if isinstance(sub, ast.Name) and sub.id in traced \
+                        and not _exempt_use(sub, node.test, tparents):
+                    yield Finding(
+                        rule="JIT101", path=ctx.path, line=node.lineno,
+                        col=node.col_offset, end_line=node.end_lineno,
+                        message=f"`{tf.fn.name}` is traced but branches on "
+                                f"traced argument `{sub.id}` with Python "
+                                f"control flow (fails or constant-folds "
+                                f"under jit)")
+                    break
+
+
+# ---------------------------------------------------------------------------
+# JIT102 — implicit host syncs on device values
+# ---------------------------------------------------------------------------
+
+_SYNC_CALLEES = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+_SYNC_BUILTINS = {"float", "int", "bool"}
+_SYNC_METHODS = {"item", "tolist"}
+
+
+def _is_device_call(call: ast.Call, device_fns: set) -> bool:
+    c = au.callee(call) or ""
+    if c.startswith(("jnp.", "jax.numpy.")):
+        return True
+    if c.startswith("jax.") and c != "jax.block_until_ready":
+        return True
+    # executor-cache program: prog.step(caches, ...) / self._fused.step(...)
+    if isinstance(call.func, ast.Attribute) and call.func.attr == "step":
+        base = au.dotted(call.func.value) or ""
+        if any(m in base.lower() for m in FUSED_BASE_MARKERS):
+            return True
+    # a callable previously bound from an executor lookup
+    f = call.func
+    if isinstance(f, ast.Name) and f.id in device_fns:
+        return True
+    return False
+
+
+def _device_provenance(fn: ast.FunctionDef) -> tuple[dict, set]:
+    """Lexical last-write-wins provenance: name -> True iff the name holds
+    a device array; plus the set of names bound to jitted programs
+    (executor lookups)."""
+    device: dict[str, bool] = {}
+    device_fns: set = set()
+
+    def expr_is_device(node: ast.AST) -> bool:
+        node_ = node
+        while isinstance(node_, (ast.Subscript, ast.Attribute,
+                                 ast.UnaryOp)):
+            node_ = getattr(node_, "value", None) or \
+                getattr(node_, "operand", None)
+        if isinstance(node_, ast.Name):
+            return device.get(node_.id, False)
+        if isinstance(node, ast.Call):
+            return _is_device_call(node, device_fns)
+        return False
+
+    for stmt in _own_statements(fn):
+        if not isinstance(stmt, ast.Assign):
+            continue
+        names = [t.id for t in au.assign_targets(stmt)
+                 if isinstance(t, ast.Name)]
+        if not names:
+            continue
+        rhs = stmt.value
+        if isinstance(rhs, ast.Call):
+            c = au.callee(rhs) or ""
+            # fn, _ = self.executors.stage_decode(lo, hi)
+            if ".executors." in ("." + c + ".") or "executors" in c.split("."):
+                device_fns.add(names[0])
+                for n in names:
+                    device[n] = False
+                continue
+            val = _is_device_call(rhs, device_fns)
+            for n in names:
+                device[n] = val
+        elif isinstance(rhs, ast.Name):
+            for n in names:
+                device[n] = device.get(rhs.id, False)
+        else:
+            val = any(isinstance(s, ast.Name) and device.get(s.id, False)
+                      for s in ast.walk(rhs))
+            for n in names:
+                device[n] = val
+    return device, device_fns
+
+
+@rule("JIT102", "host-sync",
+      "implicit device->host sync (np.asarray / float / .item / .tolist "
+      "on a device value) in host-side code",
+      hint="the fused tick's contract is ONE B-int32 sync per tick: batch "
+           "transfers, or suppress with a justification if this sync is "
+           "the intended one")
+def check_host_sync(ctx) -> Iterable[Finding]:
+    for fn in au.iter_functions(ctx.tree):
+        if any(au._is_jit(d) for d in fn.decorator_list):
+            continue                      # traced code can't host-sync
+        device, device_fns = _device_provenance(fn)
+
+        def is_device(node: ast.AST) -> bool:
+            node_ = node
+            while isinstance(node_, (ast.Subscript, ast.Attribute,
+                                     ast.UnaryOp)):
+                node_ = getattr(node_, "value", None) or \
+                    getattr(node_, "operand", None)
+            if isinstance(node_, ast.Name):
+                return device.get(node_.id, False)
+            if isinstance(node, ast.Call):
+                return _is_device_call(node, device_fns)
+            return False
+
+        for stmt in _own_statements(fn):
+            for node in _stmt_exprs(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                c = au.callee(node) or ""
+                hit = None
+                if c in _SYNC_CALLEES and node.args \
+                        and is_device(node.args[0]):
+                    hit = c
+                elif c in _SYNC_BUILTINS and len(node.args) == 1 \
+                        and is_device(node.args[0]):
+                    hit = f"{c}()"
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _SYNC_METHODS \
+                        and is_device(node.func.value):
+                    hit = f".{node.func.attr}()"
+                if hit:
+                    yield Finding(
+                        rule="JIT102", path=ctx.path, line=node.lineno,
+                        col=node.col_offset, end_line=node.end_lineno,
+                        message=f"`{hit}` forces a device->host sync on a "
+                                f"device value in `{fn.name}`")
+
+
+# ---------------------------------------------------------------------------
+# JIT103 — jit / pallas_call constructed inside a loop
+# ---------------------------------------------------------------------------
+
+@rule("JIT103", "jit-in-loop",
+      "jax.jit / pl.pallas_call constructed inside a Python loop without "
+      "a cache",
+      hint="hoist the jit/pallas_call out of the loop or route it through "
+           "a keyed cache (functools.lru_cache / the executor cache) — "
+           "each construction retraces and recompiles")
+def check_jit_in_loop(ctx) -> Iterable[Finding]:
+    parents = ctx.parents
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not (au.callee_is(node, "jax.jit", "pallas_call")
+                or au.callee(node) == "jit"):
+            continue
+        loop = au.enclosing(node, parents, ast.For, ast.While)
+        if loop is None:
+            continue
+        owner = au.enclosing(node, parents, ast.FunctionDef,
+                             ast.AsyncFunctionDef)
+        if owner is not None and any(
+                (au.dotted(d.func if isinstance(d, ast.Call) else d) or "")
+                .endswith(("lru_cache", "cache"))
+                for d in owner.decorator_list):
+            continue
+        yield Finding(
+            rule="JIT103", path=ctx.path, line=node.lineno,
+            col=node.col_offset, end_line=node.end_lineno,
+            message=f"`{au.callee(node)}` is constructed inside a "
+                    f"`{type(loop).__name__.lower()}` loop: every "
+                    f"iteration pays a fresh trace+compile")
+
+
+# ---------------------------------------------------------------------------
+# JIT104 — reading an argument after donating it
+# ---------------------------------------------------------------------------
+
+def _donating_calls(fn: ast.FunctionDef, module_donations: dict):
+    """(call_node, donated_arg_expr) pairs inside ``fn``.
+
+    Donation sources: in-module ``name = jax.jit(f, donate_argnums=...)``
+    bindings, executor-cache lookups (FLEXPIPE_DONATIONS), and
+    ``<fused/prog>.step(caches, ...)`` which donates position 0."""
+    local_don = dict(module_donations)
+    for stmt in _own_statements(fn):
+        if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+            c = au.callee(stmt.value) or ""
+            tail = c.split(".")[-1]
+            names = [t.id for t in au.assign_targets(stmt)
+                     if isinstance(t, ast.Name)]
+            if tail in FLEXPIPE_DONATIONS and names:
+                local_don[names[0]] = FLEXPIPE_DONATIONS[tail]
+    for stmt in _own_statements(fn):
+        for node in _stmt_exprs(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            positions = None
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in local_don:
+                positions = local_don[f.id]
+            elif isinstance(f, ast.Attribute) and f.attr == "step":
+                base = (au.dotted(f.value) or "").lower()
+                if any(m in base for m in FUSED_BASE_MARKERS):
+                    positions = (0,)
+            if not positions:
+                continue
+            for p in positions:
+                if p < len(node.args):
+                    yield stmt, node, node.args[p]
+
+
+def _module_donations(tree: ast.AST) -> dict:
+    out = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and (au.callee_is(node.value, "jax.jit")
+                     or au.callee(node.value) == "jit"):
+            dn = au.kwarg(node.value, "donate_argnums")
+            pos = au.int_tuple(dn) if dn is not None else None
+            names = [t.id for t in au.assign_targets(node)
+                     if isinstance(t, ast.Name)]
+            if pos and names:
+                out[names[0]] = pos
+    return out
+
+
+def _stmts_after(stmt: ast.stmt, parents: dict,
+                 fn: ast.FunctionDef) -> list[ast.stmt]:
+    """Statements that execute lexically after ``stmt`` on the same
+    control path: siblings after it in its block, then the tails of every
+    enclosing block up to ``fn`` (never the other branch of an if)."""
+    out: list[ast.stmt] = []
+    cur: ast.AST = stmt
+    while cur is not fn:
+        par = parents.get(cur)
+        if par is None:
+            break
+        for attr in ("body", "orelse", "finalbody"):
+            block = getattr(par, attr, None)
+            if isinstance(block, list) and cur in block:
+                out.extend(block[block.index(cur) + 1:])
+        cur = par
+    return out
+
+
+def _reads(stmt: ast.stmt, key: str) -> Optional[ast.AST]:
+    for node in ast.walk(stmt):
+        if isinstance(node, (ast.Name, ast.Attribute, ast.Subscript)) \
+                and not isinstance(getattr(node, "ctx", None), ast.Store):
+            try:
+                if ast.unparse(node) == key:
+                    return node
+            except Exception:       # pragma: no cover
+                continue
+    return None
+
+
+def _kills(stmt: ast.stmt, key: str) -> bool:
+    for t in au.assign_targets(stmt):
+        try:
+            if ast.unparse(t) == key:
+                return True
+        except Exception:           # pragma: no cover
+            continue
+    return False
+
+
+@rule("JIT104", "read-after-donate",
+      "a buffer is read after being passed to a donating jitted program "
+      "(donate_argnums)",
+      hint="donated buffers are consumed by XLA — rebind the name to the "
+           "program's output (e.g. `caches = new`) before any further use")
+def check_read_after_donate(ctx) -> Iterable[Finding]:
+    module_don = _module_donations(ctx.tree)
+    parents = ctx.parents
+    for fn in au.iter_functions(ctx.tree):
+        for call_stmt, call, arg in _donating_calls(fn, module_don):
+            try:
+                key = ast.unparse(arg)
+            except Exception:       # pragma: no cover
+                continue
+            if isinstance(arg, ast.Constant):
+                continue
+            if _kills(call_stmt, key):
+                continue            # rebound by the very same statement
+            flagged = False
+            for stmt in _stmts_after(call_stmt, parents, fn):
+                if (read := _reads(stmt, key)) is not None:
+                    yield Finding(
+                        rule="JIT104", path=ctx.path, line=read.lineno,
+                        col=read.col_offset, end_line=read.end_lineno,
+                        message=f"`{key}` is read here but was donated to "
+                                f"`{au.callee(call)}` on line "
+                                f"{call.lineno} (donated buffers are "
+                                f"invalidated)")
+                    flagged = True
+                    break
+                if _kills(stmt, key):
+                    break
+            if flagged:
+                continue
+            # loop wrap-around: donated in iteration N, read as the call's
+            # own argument in iteration N+1 unless rebound in the loop body
+            loop = au.enclosing(call, parents, ast.For, ast.While)
+            if loop is not None and not any(
+                    _kills(s, key) for s in ast.walk(loop)
+                    if isinstance(s, ast.stmt)):
+                yield Finding(
+                    rule="JIT104", path=ctx.path, line=call.lineno,
+                    col=call.col_offset, end_line=call.end_lineno,
+                    message=f"`{key}` is donated to `{au.callee(call)}` "
+                            f"inside a loop but never rebound in the loop "
+                            f"body — the next iteration reads a consumed "
+                            f"buffer")
+
+
+# ---------------------------------------------------------------------------
+# JIT105 — loop-invariant host->device transfer inside a loop
+# ---------------------------------------------------------------------------
+
+_TRANSFER_CALLEES = {"jnp.asarray", "jnp.array", "jax.device_put",
+                     "jax.numpy.asarray", "jax.numpy.array"}
+
+
+def _target_names(t: ast.AST):
+    """The name an assignment target rebinds — for an attribute/subscript
+    target only the attr/base, never the object it hangs off (assigning
+    ``self.caches`` does not make every ``self.*`` loop-varying)."""
+    if isinstance(t, ast.Name):
+        yield t.id
+    elif isinstance(t, ast.Attribute):
+        yield t.attr
+    elif isinstance(t, ast.Subscript):
+        yield from _target_names(t.value)
+    elif isinstance(t, ast.Starred):
+        yield from _target_names(t.value)
+    elif isinstance(t, (ast.Tuple, ast.List)):
+        for e in t.elts:
+            yield from _target_names(e)
+
+
+def _loop_assigned_names(loop: ast.AST) -> set:
+    out = set()
+    for node in ast.walk(loop):
+        if isinstance(node, ast.stmt):
+            for t in au.assign_targets(node):
+                out.update(_target_names(t))
+        if isinstance(node, ast.For):
+            for sub in ast.walk(node.target):
+                if isinstance(sub, ast.Name):
+                    out.add(sub.id)
+        if isinstance(node, ast.NamedExpr) \
+                and isinstance(node.target, ast.Name):
+            out.add(node.target.id)
+        if isinstance(node, ast.comprehension):
+            for sub in ast.walk(node.target):
+                if isinstance(sub, ast.Name):
+                    out.add(sub.id)
+    return out
+
+
+def _names_read(node: ast.AST) -> set:
+    out = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            out.add(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            out.add(sub.attr)
+    return out
+
+
+@rule("JIT105", "loop-invariant-transfer",
+      "host->device transfer of a loop-invariant value inside a loop",
+      hint="hoist the transfer above the loop — each iteration re-uploads "
+           "the same host data")
+def check_loop_invariant_transfer(ctx) -> Iterable[Finding]:
+    fns = au.module_functions(ctx.tree)
+    parents = ctx.parents
+
+    def is_transfer(call: ast.Call) -> Optional[set]:
+        """The set of names the transfer depends on, or None."""
+        c = au.callee(call) or ""
+        if c in _TRANSFER_CALLEES:
+            return _names_read(call.args[0]) if call.args else set()
+        # self._tables_dev()-style hop: a zero-arg method in this module
+        # whose body performs a transfer; depends on the attributes it reads
+        tail = c.split(".")[-1]
+        if not call.args and tail in fns:
+            body_fn = fns[tail]
+            for sub in ast.walk(body_fn):
+                if isinstance(sub, ast.Call) \
+                        and (au.callee(sub) or "") in _TRANSFER_CALLEES:
+                    return _names_read(body_fn)
+        return None
+
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        deps = is_transfer(node)
+        if deps is None:
+            continue
+        loop = au.enclosing(node, parents, ast.For, ast.While)
+        if loop is None:
+            continue
+        if au.enclosing(node, parents, ast.FunctionDef,
+                        ast.AsyncFunctionDef, ast.Lambda) is not \
+                au.enclosing(loop, parents, ast.FunctionDef,
+                             ast.AsyncFunctionDef, ast.Lambda):
+            continue                # loop and call in different scopes
+        varying = _loop_assigned_names(loop)
+        if deps & varying:
+            continue
+        yield Finding(
+            rule="JIT105", path=ctx.path, line=node.lineno,
+            col=node.col_offset, end_line=node.end_lineno,
+            message=f"`{au.callee(node)}` re-uploads loop-invariant host "
+                    f"data on every iteration of the enclosing "
+                    f"{type(loop).__name__.lower()} loop")

@@ -1,0 +1,290 @@
+"""Pallas kernel contract rules (PAL2xx).
+
+A ``pl.pallas_call`` site wires four things together — grid, BlockSpecs,
+kernel signature, scratch — and TPU Pallas checks almost none of it
+statically.  These rules recompute the contracts from the AST:
+
+* PAL201 — per-dimension coverage: ``grid[axis] * block`` vs operand dim,
+  with symbolic ``min``/``ceildiv`` reasoning so padded-reshape kernels
+  prove clean and the masked-tail idiom is called out explicitly.
+* PAL202 — index-map arity = len(grid) + num_scalar_prefetch.
+* PAL203 — kernel parameter count = prefetch + inputs + outputs + scratch,
+  and operand count = prefetch + len(in_specs).
+* PAL204 — table-walk loads (index map reads a prefetched block table)
+  must sit under a ``pl.when`` length guard.
+* PAL205 — ``pl.program_id(axis)`` within the declared grid rank.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from repro.analysis import astutil as au
+from repro.analysis import symbols as sy
+from repro.analysis.findings import Finding
+from repro.analysis.registry import rule
+
+
+def _grid_dims(site, res: sy.Resolver) -> Optional[list]:
+    if site.grid is None:
+        return None
+    g = au.resolve_name(site.grid, site.env)
+    if isinstance(g, (ast.Tuple, ast.List)):
+        return [res.resolve(e) for e in g.elts]
+    return [res.resolve(g)]
+
+
+def _operand_shape(op: ast.AST, site, res: sy.Resolver) -> Optional[tuple]:
+    return sy.shape_of_expr(op, res, site.env)
+
+
+def _out_shapes(site, res: sy.Resolver) -> list:
+    """Shape tuples (or None) for each output, from out_shape."""
+    node = au.kwarg(site.call, "out_shape")
+    if node is None:
+        return []
+    node = au.resolve_name(node, site.env)
+    elts = node.elts if isinstance(node, (ast.List, ast.Tuple)) else [node]
+    return [sy.shape_of_expr(e, res, site.env) for e in elts]
+
+
+# ---------------------------------------------------------------------------
+# PAL201 — block-shape / grid coverage vs operand dims
+# ---------------------------------------------------------------------------
+
+@rule("PAL201", "block-grid-coverage",
+      "BlockSpec block shape times grid extent does not cover the operand "
+      "dimension exactly",
+      hint="make the grid ceil-divide the padded dim (pad the operand like "
+           "flash_attention), or — if the tail overhang is masked in the "
+           "kernel — suppress with a justification naming the mask")
+def check_block_grid_coverage(ctx) -> Iterable[Finding]:
+    for site in ctx.pallas_sites:
+        res = sy.Resolver(site.env)
+        grid = _grid_dims(site, res)
+        if not grid:
+            continue
+        operands = site.operands()[site.n_prefetch:]
+        op_shapes = [_operand_shape(o, site, res) for o in operands]
+        pairs = list(zip(site.in_specs, op_shapes))
+        pairs += list(zip(site.out_specs, _out_shapes(site, res)))
+        for spec, shape in pairs:
+            if spec is None or shape is None:
+                continue
+            block, imap = au.blockspec_parts(spec)
+            if block is None or imap is None:
+                continue
+            req, _ = au.lambda_params(imap)
+            body = imap.body
+            idx_exprs = (body.elts
+                         if isinstance(body, (ast.Tuple, ast.List))
+                         else [body])
+            if len(idx_exprs) != len(block.elts) \
+                    or len(block.elts) != len(shape):
+                continue            # rank mismatch is PAL203 territory
+            for d, (bexpr, iexpr) in enumerate(zip(block.elts, idx_exprs)):
+                if not (isinstance(iexpr, ast.Name)
+                        and iexpr.id in req[:len(grid)]):
+                    continue        # derived/constant index: no bound here
+                axis = req.index(iexpr.id)
+                bdim = res.resolve(bexpr)
+                extent = sy.mul(grid[axis], bdim)
+                dim = shape[d]
+                if isinstance(dim, sy.Unknown) \
+                        or isinstance(extent, sy.Unknown):
+                    continue
+                if sy.definitely_equal(extent, dim):
+                    continue
+                over = sy.ceil_overhang(extent, dim)
+                if over is not None:
+                    yield Finding(
+                        rule="PAL201", path=ctx.path, line=spec.lineno,
+                        col=spec.col_offset, end_line=spec.end_lineno,
+                        message=f"block dim {d} covers "
+                                f"{extent!r} rows but the operand dim is "
+                                f"{dim!r}: the tail block reads up to "
+                                f"{over!r}-1 rows past the array end "
+                                f"(must be masked in the kernel)")
+                else:
+                    yield Finding(
+                        rule="PAL201", path=ctx.path, line=spec.lineno,
+                        col=spec.col_offset, end_line=spec.end_lineno,
+                        message=f"block dim {d}: grid axis {axis} x block "
+                                f"gives extent {extent!r}, operand dim is "
+                                f"{dim!r} — coverage mismatch")
+
+
+# ---------------------------------------------------------------------------
+# PAL202 — index-map arity
+# ---------------------------------------------------------------------------
+
+@rule("PAL202", "index-map-arity",
+      "BlockSpec index_map arity != len(grid) + num_scalar_prefetch",
+      hint="index maps take one argument per grid axis plus one ref per "
+           "scalar-prefetch operand (defaulted lambda params excluded)")
+def check_index_map_arity(ctx) -> Iterable[Finding]:
+    for site in ctx.pallas_sites:
+        res = sy.Resolver(site.env)
+        grid = _grid_dims(site, res)
+        if grid is None:
+            continue
+        want = len(grid) + site.n_prefetch
+        for spec in (*site.in_specs, *site.out_specs):
+            if spec is None:
+                continue
+            _, imap = au.blockspec_parts(spec)
+            if imap is None:
+                continue
+            req, _ = au.lambda_params(imap)
+            if len(req) != want:
+                yield Finding(
+                    rule="PAL202", path=ctx.path, line=imap.lineno,
+                    col=imap.col_offset, end_line=imap.end_lineno,
+                    message=f"index_map takes {len(req)} required args but "
+                            f"grid rank {len(grid)} + "
+                            f"{site.n_prefetch} scalar-prefetch refs "
+                            f"= {want}")
+
+
+# ---------------------------------------------------------------------------
+# PAL203 — kernel signature / operand arity
+# ---------------------------------------------------------------------------
+
+@rule("PAL203", "kernel-arity",
+      "kernel signature or operand count inconsistent with the "
+      "pallas_call's specs",
+      hint="kernel positional params = scalar-prefetch refs + inputs + "
+           "outputs + scratch, in that order; call operands = prefetch + "
+           "inputs")
+def check_kernel_arity(ctx) -> Iterable[Finding]:
+    for site in ctx.pallas_sites:
+        n_in = len(site.in_specs)
+        n_out = site.n_out
+        if not n_out:
+            out_shape = au.kwarg(site.call, "out_shape")
+            if out_shape is not None:
+                shp = au.resolve_name(out_shape, site.env)
+                n_out = (len(shp.elts)
+                         if isinstance(shp, (ast.List, ast.Tuple)) else 1)
+        if site.outer is not None and n_in:
+            n_ops = len(site.outer.args)
+            want_ops = site.n_prefetch + n_in
+            if n_ops != want_ops:
+                yield Finding(
+                    rule="PAL203", path=ctx.path,
+                    line=site.outer.lineno, col=site.outer.col_offset,
+                    end_line=site.outer.end_lineno,
+                    message=f"pallas_call is invoked with {n_ops} operands "
+                            f"but declares {site.n_prefetch} scalar-"
+                            f"prefetch + {n_in} in_specs = {want_ops}")
+        if site.kernel is None or not n_in or not n_out:
+            continue
+        n_params = len(au.positional_params(site.kernel))
+        want = site.n_prefetch + n_in + n_out + site.n_scratch
+        if n_params != want:
+            yield Finding(
+                rule="PAL203", path=ctx.path, line=site.call.lineno,
+                col=site.call.col_offset, end_line=site.call.end_lineno,
+                message=f"kernel `{site.kernel.name}` takes {n_params} "
+                        f"positional refs but the call wires "
+                        f"{site.n_prefetch} prefetch + {n_in} inputs + "
+                        f"{n_out} outputs + {site.n_scratch} scratch "
+                        f"= {want}")
+
+
+# ---------------------------------------------------------------------------
+# PAL204 — table-walk loads must be pl.when-guarded
+# ---------------------------------------------------------------------------
+
+def _walked_param_names(site) -> list[str]:
+    """Kernel param names whose BlockSpec index map subscripts a
+    scalar-prefetch ref (i.e. DMAs a table-selected block)."""
+    if site.kernel is None or site.n_prefetch == 0:
+        return []
+    params = au.positional_params(site.kernel)
+    out = []
+    for i, spec in enumerate(site.in_specs):
+        if spec is None:
+            continue
+        _, imap = au.blockspec_parts(spec)
+        if imap is None:
+            continue
+        req, _ = au.lambda_params(imap)
+        prefetch_refs = set(req[-site.n_prefetch:]) \
+            if site.n_prefetch else set()
+        walks = any(isinstance(n, ast.Subscript)
+                    and isinstance(n.value, ast.Name)
+                    and n.value.id in prefetch_refs
+                    for n in ast.walk(imap.body))
+        pi = site.n_prefetch + i
+        if walks and pi < len(params):
+            out.append(params[pi])
+    return out
+
+
+def _under_when(node: ast.AST, parents: dict,
+                kernel: ast.FunctionDef) -> bool:
+    cur = parents.get(node)
+    while cur is not None and cur is not kernel:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for deco in cur.decorator_list:
+                d = deco.func if isinstance(deco, ast.Call) else deco
+                if (au.dotted(d) or "").endswith("when"):
+                    return True
+        cur = parents.get(cur)
+    return False
+
+
+@rule("PAL204", "unguarded-table-walk",
+      "a table-walked ref (index map reads the prefetched block table) is "
+      "loaded outside a pl.when guard",
+      hint="wrap the compute on table-selected blocks in "
+           "`@pl.when(block_start < cache_len)` — unallocated table "
+           "entries alias the null block and must not feed the softmax")
+def check_unguarded_table_walk(ctx) -> Iterable[Finding]:
+    for site in ctx.pallas_sites:
+        walked = set(_walked_param_names(site))
+        if not walked:
+            continue
+        kparents = au.build_parents(site.kernel)
+        for node in ast.walk(site.kernel):
+            if isinstance(node, ast.Subscript) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id in walked \
+                    and not isinstance(node.ctx, ast.Store) \
+                    and not _under_when(node, kparents, site.kernel):
+                yield Finding(
+                    rule="PAL204", path=ctx.path, line=node.lineno,
+                    col=node.col_offset, end_line=node.end_lineno,
+                    message=f"table-walked ref `{node.value.id}` is read "
+                            f"outside any pl.when guard in kernel "
+                            f"`{site.kernel.name}`")
+
+
+# ---------------------------------------------------------------------------
+# PAL205 — program_id axis within grid rank
+# ---------------------------------------------------------------------------
+
+@rule("PAL205", "program-id-rank",
+      "pl.program_id(axis) with axis outside the declared grid rank",
+      hint="grid axes are 0-based; a kernel shared by several call sites "
+           "must not index past the smallest grid rank it is launched with")
+def check_program_id_rank(ctx) -> Iterable[Finding]:
+    for site in ctx.pallas_sites:
+        if site.kernel is None:
+            continue
+        res = sy.Resolver(site.env)
+        grid = _grid_dims(site, res)
+        if not grid:
+            continue
+        for node in ast.walk(site.kernel):
+            if isinstance(node, ast.Call) \
+                    and au.callee_is(node, "program_id") and node.args:
+                axis = au.const_int(node.args[0])
+                if axis is not None and not (0 <= axis < len(grid)):
+                    yield Finding(
+                        rule="PAL205", path=ctx.path, line=node.lineno,
+                        col=node.col_offset, end_line=node.end_lineno,
+                        message=f"pl.program_id({axis}) in kernel "
+                                f"`{site.kernel.name}` but the launch grid "
+                                f"has rank {len(grid)}")

@@ -1,0 +1,80 @@
+"""Rule registry for the FlexPipe static analyzer.
+
+Rules are plain functions ``check(ctx) -> Iterable[Finding]`` registered
+with the :func:`rule` decorator under a stable id.  Ids are grouped by
+hazard class:
+
+* ``JIT1xx`` — JIT-boundary rules (tracing, host syncs, donation)
+* ``PAL2xx`` — Pallas kernel contract rules (BlockSpec/grid/prefetch)
+* ``PIPE3xx`` — pipeline-invariant rules (stage ranges, allocator
+  lifecycle, Eq. 10 threading)
+
+The registry is import-driven: importing :mod:`repro.analysis` loads the
+three rule packs, which register themselves here.  Adding a rule means
+writing one checker function + a bad/good fixture pair in
+``tests/test_analysis.py`` (the tests iterate this registry, so a rule
+without fixtures fails CI).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str                   # short kebab-case label
+    summary: str                # one-line description (--list-rules)
+    check: Callable             # check(ctx) -> Iterable[Finding]
+    hint: str = ""              # default fix hint attached to findings
+
+
+_RULES: dict[str, Rule] = {}
+
+
+def rule(id: str, name: str, summary: str, hint: str = ""):
+    """Register ``check(ctx)`` under a stable rule id."""
+    def deco(fn):
+        if id in _RULES:
+            raise ValueError(f"duplicate rule id {id!r}")
+        _RULES[id] = Rule(id=id, name=name, summary=summary, check=fn,
+                          hint=hint)
+        return fn
+    return deco
+
+
+def all_rules() -> list[Rule]:
+    _load_packs()
+    return [_RULES[k] for k in sorted(_RULES)]
+
+
+def get_rule(rule_id: str) -> Optional[Rule]:
+    _load_packs()
+    return _RULES.get(rule_id)
+
+
+def select_rules(select: Optional[Iterable[str]] = None,
+                 ignore: Optional[Iterable[str]] = None) -> list[Rule]:
+    """Filter the registry: ``select`` keeps only the named ids, then
+    ``ignore`` drops ids (both accept ids or kebab names)."""
+    rules = all_rules()
+    if select:
+        keys = {s.strip() for s in select}
+        rules = [r for r in rules if r.id in keys or r.name in keys]
+    if ignore:
+        keys = {s.strip() for s in ignore}
+        rules = [r for r in rules if r.id not in keys and r.name not in keys]
+    return rules
+
+
+_loaded = False
+
+
+def _load_packs() -> None:
+    global _loaded
+    if _loaded:
+        return
+    _loaded = True
+    # import for registration side effects
+    from repro.analysis import jit_rules, pallas_rules, pipeline_rules  # noqa: F401

@@ -1,0 +1,337 @@
+"""Tiny symbolic-expression engine for Pallas shape reasoning.
+
+The kernel files compute grids and block shapes from runtime dims
+(``nk = math.ceil(Smax / bk)``; ``bq = min(block_q, Sq)``), so proving
+"grid extent covers the operand dim exactly" needs a little algebra, not
+just constant folding.  Expressions are canonicalised products/sums over
+:class:`Sym` leaves with ``CeilDiv``/``Min``/``Max`` operators; two
+expressions are *definitely equal* when their canonical forms match.
+
+The one inequality the analyzer cares about: an extent
+``b * ceildiv(d, b)`` against a dim ``d`` is **>=** with a possible
+overhang (the classic masked-tail idiom) — :func:`ceil_overhang`
+recognises exactly that shape so PAL201 can phrase the finding.
+"""
+from __future__ import annotations
+
+import ast
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+
+class Expr:
+    """Base class; subclasses are frozen dataclasses usable as dict keys."""
+
+
+@dataclass(frozen=True)
+class Const(Expr):
+    v: int
+
+    def __repr__(self):
+        return str(self.v)
+
+
+@dataclass(frozen=True)
+class Sym(Expr):
+    name: str
+
+    def __repr__(self):
+        return self.name
+
+
+@dataclass(frozen=True)
+class Add(Expr):
+    terms: tuple
+
+    def __repr__(self):
+        return "(" + " + ".join(map(repr, self.terms)) + ")"
+
+
+@dataclass(frozen=True)
+class Mul(Expr):
+    factors: tuple
+
+    def __repr__(self):
+        return "*".join(map(repr, self.factors))
+
+
+@dataclass(frozen=True)
+class CeilDiv(Expr):
+    num: Expr
+    den: Expr
+
+    def __repr__(self):
+        return f"ceildiv({self.num!r}, {self.den!r})"
+
+
+@dataclass(frozen=True)
+class Min(Expr):
+    args: tuple
+
+    def __repr__(self):
+        return "min(" + ", ".join(map(repr, self.args)) + ")"
+
+
+@dataclass(frozen=True)
+class Max(Expr):
+    args: tuple
+
+    def __repr__(self):
+        return "max(" + ", ".join(map(repr, self.args)) + ")"
+
+
+class Unknown(Expr):
+    """Opaque — compares equal to nothing, including itself."""
+
+    def __eq__(self, other):  # pragma: no cover - identity semantics
+        return False
+
+    def __hash__(self):
+        return id(self)
+
+    def __repr__(self):
+        return "?"
+
+
+def _sort_key(e: Expr) -> str:
+    return repr(e)
+
+
+def mul(*factors: Expr) -> Expr:
+    flat: list[Expr] = []
+    c = 1
+    for f in factors:
+        if isinstance(f, Unknown):
+            return Unknown()
+        if isinstance(f, Const):
+            c *= f.v
+        elif isinstance(f, Mul):
+            flat.extend(f.factors)
+        else:
+            flat.append(f)
+    if c == 0:
+        return Const(0)
+    if c != 1:
+        flat.append(Const(c))
+    flat.sort(key=_sort_key)
+    if not flat:
+        return Const(1)
+    if len(flat) == 1:
+        return flat[0]
+    return Mul(tuple(flat))
+
+
+def add(*terms: Expr) -> Expr:
+    flat: list[Expr] = []
+    c = 0
+    for t in terms:
+        if isinstance(t, Unknown):
+            return Unknown()
+        if isinstance(t, Const):
+            c += t.v
+        elif isinstance(t, Add):
+            flat.extend(t.terms)
+        else:
+            flat.append(t)
+    if c != 0:
+        flat.append(Const(c))
+    flat.sort(key=_sort_key)
+    if not flat:
+        return Const(0)
+    if len(flat) == 1:
+        return flat[0]
+    return Add(tuple(flat))
+
+
+def ceildiv(num: Expr, den: Expr) -> Expr:
+    if isinstance(num, Unknown) or isinstance(den, Unknown):
+        return Unknown()
+    if isinstance(num, Const) and isinstance(den, Const) and den.v:
+        return Const(math.ceil(num.v / den.v))
+    if num == den:
+        return Const(1)
+    return CeilDiv(num, den)
+
+
+def mk_min(*args: Expr) -> Expr:
+    if any(isinstance(a, Unknown) for a in args):
+        return Unknown()
+    consts = [a.v for a in args if isinstance(a, Const)]
+    rest = sorted((a for a in args if not isinstance(a, Const)),
+                  key=_sort_key)
+    if consts and not rest:
+        return Const(min(consts))
+    parts = tuple(rest + ([Const(min(consts))] if consts else []))
+    return parts[0] if len(parts) == 1 else Min(parts)
+
+
+def mk_max(*args: Expr) -> Expr:
+    if any(isinstance(a, Unknown) for a in args):
+        return Unknown()
+    consts = [a.v for a in args if isinstance(a, Const)]
+    rest = sorted((a for a in args if not isinstance(a, Const)),
+                  key=_sort_key)
+    if consts and not rest:
+        return Const(max(consts))
+    parts = tuple(rest + ([Const(max(consts))] if consts else []))
+    return parts[0] if len(parts) == 1 else Max(parts)
+
+
+def definitely_equal(a: Expr, b: Expr) -> bool:
+    if isinstance(a, Unknown) or isinstance(b, Unknown):
+        return False
+    return a == b
+
+
+def ceil_overhang(extent: Expr, dim: Expr) -> Optional[Expr]:
+    """If ``extent`` has the shape ``b * ceildiv(d, b)`` with ``d == dim``
+    (and not exactly divisible), return the block ``b`` — the extent may
+    overrun ``dim`` by up to ``b - 1`` rows.  None when the pattern does
+    not apply."""
+    factors = (extent.factors if isinstance(extent, Mul) else (extent,))
+    cds = [f for f in factors if isinstance(f, CeilDiv)]
+    for cd in cds:
+        others = list(factors)
+        others.remove(cd)
+        b = mul(*others) if others else Const(1)
+        if definitely_equal(cd.den, b) and definitely_equal(cd.num, dim):
+            return b
+    return None
+
+
+# ---------------------------------------------------------------------------
+# AST -> Expr
+# ---------------------------------------------------------------------------
+
+class Resolver:
+    """Resolves AST expressions to canonical :class:`Expr` under an
+    environment of simple assignments (``name -> ast rhs``).  Unresolvable
+    sub-expressions become fresh :class:`Sym` leaves keyed by their source
+    text, so two occurrences of the same expression still unify."""
+
+    def __init__(self, env: dict, shapes: Optional[dict] = None):
+        self.env = env
+        #: name -> tuple[Expr, ...] for arrays whose shape is known
+        self.shapes = shapes or {}
+        self._stack: set = set()
+
+    def resolve(self, node: ast.AST) -> Expr:
+        try:
+            return self._resolve(node)
+        except RecursionError:  # pragma: no cover - defensive
+            return Unknown()
+
+    def _resolve(self, node: ast.AST) -> Expr:
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, int) and not isinstance(node.value, bool):
+                return Const(node.value)
+            return Unknown()
+        if isinstance(node, ast.Name):
+            if node.id in self._stack:
+                return Sym(node.id)
+            if node.id in self.env:
+                self._stack.add(node.id)
+                try:
+                    out = self._resolve(self.env[node.id])
+                finally:
+                    self._stack.discard(node.id)
+                return out if not isinstance(out, Unknown) else Sym(node.id)
+            return Sym(node.id)
+        if isinstance(node, ast.BinOp):
+            left, right = self._resolve(node.left), self._resolve(node.right)
+            if isinstance(node.op, ast.Mult):
+                return mul(left, right)
+            if isinstance(node.op, ast.Add):
+                return add(left, right)
+            if isinstance(node.op, ast.Sub):
+                return add(left, mul(Const(-1), right))
+            if isinstance(node.op, ast.FloorDiv):
+                if isinstance(left, Const) and isinstance(right, Const) \
+                        and right.v:
+                    return Const(left.v // right.v)
+                # b*ceildiv(d,b) // b == ceildiv(d,b); general case opaque
+                if isinstance(left, Mul) and right in left.factors:
+                    rest = list(left.factors)
+                    rest.remove(right)
+                    return mul(*rest)
+                if left == right:
+                    return Const(1)
+                return self._sym_of(node)
+            return self._sym_of(node)
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            args = [self._resolve(a) for a in node.args]
+            if name in ("math.ceil", "ceil") and len(node.args) == 1 \
+                    and isinstance(node.args[0], ast.BinOp) \
+                    and isinstance(node.args[0].op, ast.Div):
+                return ceildiv(self._resolve(node.args[0].left),
+                               self._resolve(node.args[0].right))
+            if name in ("pl.cdiv", "cdiv", "ceil_div", "ceildiv") \
+                    and len(args) == 2:
+                return ceildiv(args[0], args[1])
+            if name == "min" and args:
+                return mk_min(*args)
+            if name == "max" and args:
+                return mk_max(*args)
+            if name == "len" and len(node.args) == 1:
+                return self._sym_of(node)
+            return self._sym_of(node)
+        if isinstance(node, ast.Subscript):
+            base = node.value
+            # x.shape[i] with known shape for x
+            if isinstance(base, ast.Attribute) and base.attr == "shape" \
+                    and isinstance(base.value, ast.Name):
+                shp = self.shapes.get(base.value.id)
+                idx = node.slice
+                if shp is not None and isinstance(idx, ast.Constant) \
+                        and isinstance(idx.value, int) \
+                        and -len(shp) <= idx.value < len(shp):
+                    return shp[idx.value]
+            return self._sym_of(node)
+        if isinstance(node, ast.Attribute):
+            return self._sym_of(node)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            return mul(Const(-1), self._resolve(node.operand))
+        return Unknown()
+
+    def _sym_of(self, node: ast.AST) -> Expr:
+        try:
+            return Sym(ast.unparse(node))
+        except Exception:  # pragma: no cover
+            return Unknown()
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    parts = []
+    while isinstance(f, ast.Attribute):
+        parts.append(f.attr)
+        f = f.value
+    if isinstance(f, ast.Name):
+        parts.append(f.id)
+    return ".".join(reversed(parts))
+
+
+def shape_of_expr(node: ast.AST, res: Resolver,
+                  env: dict) -> Optional[tuple]:
+    """Best-effort shape tuple for an operand expression: chases names,
+    ``.reshape(...)`` / ``.transpose(...).reshape(...)`` chains, and
+    ``jax.ShapeDtypeStruct((..), ..)``."""
+    import repro.analysis.astutil as au
+    node = au.resolve_name(node, env)
+    if isinstance(node, ast.Name) and node.id in res.shapes:
+        return res.shapes[node.id]
+    if isinstance(node, ast.Call):
+        name = _call_name(node)
+        tail = name.split(".")[-1]
+        if tail == "reshape" and node.args:
+            dims = node.args
+            if len(dims) == 1 and isinstance(dims[0], (ast.Tuple, ast.List)):
+                dims = dims[0].elts
+            return tuple(res.resolve(d) for d in dims)
+        if tail == "ShapeDtypeStruct" and node.args:
+            shp = node.args[0]
+            if isinstance(shp, (ast.Tuple, ast.List)):
+                return tuple(res.resolve(d) for d in shp.elts)
+    return None

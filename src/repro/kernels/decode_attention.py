@@ -117,7 +117,9 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
         in_specs=[
             pl.BlockSpec((1, 1), lambda h, j: (h, 0)),
             pl.BlockSpec((1, G, hd), lambda h, j: (h, 0, 0)),
+            # repro: noqa[PAL201] -- masked tail (pos/cache_len guard on k)
             pl.BlockSpec((1, bk, hd), lambda h, j: (h, j, 0)),
+            # repro: noqa[PAL201] -- masked tail (vpos zeroing guard on v)
             pl.BlockSpec((1, bk, hdv), lambda h, j: (h, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, G, hdv), lambda h, j: (h, 0, 0)),

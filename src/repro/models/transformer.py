@@ -210,7 +210,7 @@ def init_model(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
     """Exact parameter count via eval_shape (no allocation)."""
     shapes = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
-    total = sum(int(jnp.prod(jnp.array(x.shape))) if x.shape else 1
+    total = sum(math.prod(x.shape) if x.shape else 1
                 for x in jax.tree.leaves(shapes))
     if active_only and cfg.moe is not None:
         n_moe_layers = sum(1 for i in range(cfg.n_layers)

@@ -724,6 +724,9 @@ class FlexPipeEngine:
             hist[i] = h
         cursor = {i: int(valid[i]) for i in active}
         ticks = 0
+        # replay never allocates blocks (rebuilt rows land in blocks the
+        # slots already own), so one table upload covers every tick below
+        tables = self._tables_dev()
         while any(cursor[i] < self.slots[i].pos for i in active):
             tok = np.zeros((B, 1), np.int32)
             pos = np.zeros((B,), np.int32)
@@ -737,8 +740,7 @@ class FlexPipeEngine:
                 # of the snapshot-time tables for covered slots), so
                 # rebuilt rows land in the blocks the slot already owns
                 _, new = self._fused.step(self.caches, jnp.asarray(tok),
-                                          jnp.asarray(pos),
-                                          self._tables_dev())
+                                          jnp.asarray(pos), tables)
                 self.caches = new
             else:
                 self._decode_unfused(tok, pos)
@@ -1049,6 +1051,9 @@ class FlexPipeEngine:
         s.pos = c0 + L
         self.stats.bump("prefill_chunks")
         if final:
+            # only the final chunk samples; its one token must reach the
+            # host to seed s.generated for the decode loop
+            # repro: noqa[JIT102] -- intended one-token sync (last chunk)
             first = int(np.asarray(out)[0])          # first sampled token
             req.first_token = now                    # TTFT: this chunk
             s.generated = [first]
@@ -1097,6 +1102,7 @@ class FlexPipeEngine:
         slot.pos = S
         slot.prompt = prompt.astype(np.int64)
         slot.budget = budget
+        # repro: noqa[JIT102] -- intended one-token sync ending prefill
         first = int(np.asarray(out)[0])              # first sampled token
         req.first_token = now                        # TTFT: prefill emits it
         slot.generated = [first]
@@ -1150,6 +1156,7 @@ class FlexPipeEngine:
                                             jnp.asarray(pos),
                                             self._tables_dev())
             self.caches = new
+            # repro: noqa[JIT102] -- THE per-tick sync: one B-int32 copy
             nxt = np.asarray(nxt_dev)
         else:
             nxt = self._decode_unfused(tok, pos)
@@ -1194,6 +1201,7 @@ class FlexPipeEngine:
                         pos_v, None)
             self.caches[lo:hi] = new
         logits = lm_head(self.cfg, self.params, x)[:, -1, :]
+        # repro: noqa[JIT102] -- unfused fallback's intended per-tick sync
         return np.asarray(jnp.argmax(logits, axis=-1))
 
     # ------------------------------------------------------------------

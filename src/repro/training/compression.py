@@ -14,6 +14,7 @@ training loops that keep state (``ErrorFeedback``).
 """
 from __future__ import annotations
 
+import math
 from typing import Any
 
 import jax
@@ -46,7 +47,7 @@ def topk_compress(g: jax.Array, frac: float = 0.01):
 
 
 def topk_decompress(vals, idx, shape):
-    flat = jnp.zeros(int(jnp.prod(jnp.array(shape))), f32)
+    flat = jnp.zeros(math.prod(shape), f32)
     return flat.at[idx].set(vals).reshape(shape)
 
 

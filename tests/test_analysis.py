@@ -1,0 +1,633 @@
+"""Tests for the FlexPipe static analyzer (src/repro/analysis).
+
+Every registered rule must have a bad/good fixture pair here: the bad
+snippet triggers the rule, the good one is the idiomatic fix and stays
+silent.  A new rule without fixtures fails ``test_every_rule_has_fixtures``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (all_rules, analyze_paths, analyze_source,
+                            parse_suppressions)
+from repro.analysis.registry import rule as register_rule
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def dedent(s: str) -> str:
+    return textwrap.dedent(s).lstrip()
+
+
+def hits(source: str, rule_id: str):
+    return [f for f in analyze_source(dedent(source))
+            if f.rule == rule_id and not f.suppressed]
+
+
+# ---------------------------------------------------------------------------
+# fixture pairs: rule id -> (bad snippet it must catch, good snippet it
+# must not flag)
+# ---------------------------------------------------------------------------
+
+FIXTURES = {
+    "JIT101": (
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x, flag=None):
+            if flag is None:
+                return x
+            if x.ndim == 2:
+                return x
+            return jnp.where(x > 0, x, -x)
+        """,
+    ),
+    "JIT102": (
+        """
+        import jax.numpy as jnp
+        import numpy as np
+
+        def tick(tok):
+            y = jnp.argmax(tok)
+            return np.asarray(y)
+        """,
+        """
+        import numpy as np
+
+        def tick(xs):
+            y = np.argmax(xs)
+            return float(np.mean(xs))
+        """,
+    ),
+    "JIT103": (
+        """
+        import jax
+
+        def run(step, xs):
+            outs = []
+            for x in xs:
+                f = jax.jit(step)
+                outs.append(f(x))
+            return outs
+        """,
+        """
+        import jax
+
+        def run(step, xs):
+            f = jax.jit(step)
+            return [f(x) for x in xs]
+        """,
+    ),
+    "JIT104": (
+        """
+        import jax
+
+        def drive(step, caches, tok):
+            prog = jax.jit(step, donate_argnums=(0,))
+            out = prog(caches, tok)
+            return caches[0], out
+        """,
+        """
+        import jax
+
+        def drive(step, caches, tok):
+            prog = jax.jit(step, donate_argnums=(0,))
+            caches = prog(caches, tok)
+            return caches
+        """,
+    ),
+    "JIT105": (
+        """
+        import jax.numpy as jnp
+
+        def replay(prog, toks, tables):
+            for t in toks:
+                prog(jnp.asarray(t), jnp.asarray(tables))
+        """,
+        """
+        import jax.numpy as jnp
+
+        def replay(prog, toks, tables):
+            tdev = jnp.asarray(tables)
+            for t in toks:
+                prog(jnp.asarray(t), tdev)
+        """,
+    ),
+    "PAL201": (
+        """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def call(x):
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8, 4), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((8, 4), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((30, 4), x.dtype),
+            )(x)
+        """,
+        """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def call(x):
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8, 4), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((8, 4), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((32, 4), x.dtype),
+            )(x)
+        """,
+    ),
+    "PAL202": (
+        """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def call(x):
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i, j: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32,), x.dtype),
+            )(x)
+        """,
+        """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def call(x, G=2):
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i, G=G: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32,), x.dtype),
+            )(x)
+        """,
+    ),
+    "PAL203": (
+        """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def call(x):
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32,), x.dtype),
+                scratch_shapes=[pltpu.VMEM((8,), jnp.float32)],
+            )(x)
+        """,
+        """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kern(x_ref, o_ref, acc_ref):
+            o_ref[...] = x_ref[...]
+
+        def call(x):
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32,), x.dtype),
+                scratch_shapes=[pltpu.VMEM((8,), jnp.float32)],
+            )(x)
+        """,
+    ),
+    "PAL204": (
+        """
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kern(bt_ref, x_ref, o_ref):
+            o_ref[...] = x_ref[0]
+
+        def call(bt, x):
+            gs = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((1, 8), lambda i, bt: (bt[i], 0))],
+                out_specs=pl.BlockSpec((1, 8), lambda i, bt: (i, 0)),
+            )
+            return pl.pallas_call(kern, grid_spec=gs)(bt, x)
+        """,
+        """
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kern(bt_ref, x_ref, o_ref):
+            @pl.when(pl.program_id(0) < 3)
+            def _compute():
+                o_ref[...] = x_ref[0]
+
+        def call(bt, x):
+            gs = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((1, 8), lambda i, bt: (bt[i], 0))],
+                out_specs=pl.BlockSpec((1, 8), lambda i, bt: (i, 0)),
+            )
+            return pl.pallas_call(kern, grid_spec=gs)(bt, x)
+        """,
+    ),
+    "PAL205": (
+        """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def kern(x_ref, o_ref):
+            i = pl.program_id(2)
+            o_ref[...] = x_ref[...]
+
+        def call(x):
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32,), x.dtype),
+            )(x)
+        """,
+        """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def kern(x_ref, o_ref):
+            i = pl.program_id(0)
+            o_ref[...] = x_ref[...]
+
+        def call(x):
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32,), x.dtype),
+            )(x)
+        """,
+    ),
+    "PIPE301": (
+        """
+        def stage_ranges(boundaries, n_layers):
+            out = []
+            for lo, hi in zip(boundaries, boundaries[1:]):
+                out.append((lo, hi))
+            return out
+        """,
+        """
+        def stage_ranges(boundaries, n_layers):
+            ends = boundaries[1:] + [n_layers]
+            out = []
+            for lo, hi in zip(boundaries, ends):
+                out.append((lo, hi))
+            return out
+        """,
+    ),
+    "PIPE301C": (
+        """
+        def partition(nodes, n_stages):
+            per = len(nodes) // n_stages
+            return [i * per for i in range(n_stages)]
+        """,
+        """
+        def partition(nodes, n_stages):
+            cuts = [i for i, nd in enumerate(nodes) if nd.pattern_boundary]
+            return cuts[:n_stages]
+        """,
+    ),
+    "PIPE302": (
+        """
+        class Engine:
+            def finish(self, i):
+                self.slots[i].done = True
+
+            def grow(self, n):
+                ids = self.allocator.alloc(n)
+                self.blocks.extend(ids)
+        """,
+        """
+        class Engine:
+            def finish(self, i):
+                self.slots[i].done = True
+                self._free_slot_blocks(i)
+
+            def _free_slot_blocks(self, i):
+                self.allocator.free(self.blocks[i])
+
+            def grow(self, n):
+                ids = self.allocator.alloc(n)
+                if ids is None:
+                    return False
+                self.blocks.extend(ids)
+                return True
+        """,
+    ),
+    "PIPE303": (
+        """
+        def restore(self, snap, live):
+            self.caches = merge_paged_with_mask(snap, live,
+                                                self.block_tables)
+        """,
+        """
+        def restore(self, snap, live, valid):
+            bv = block_validity(self._snap_tables, valid)
+            self.caches = merge_paged_with_mask(
+                CacheSnapshot(snap.per_layer, valid), live, bv)
+        """,
+    ),
+}
+
+
+def test_every_rule_has_fixtures():
+    registered = {r.id for r in all_rules()}
+    assert registered == set(FIXTURES), (
+        "every registered rule needs a bad/good fixture pair in "
+        "tests/test_analysis.py")
+
+
+@pytest.mark.parametrize("rule_id", sorted(FIXTURES))
+def test_bad_fixture_triggers(rule_id):
+    bad, _ = FIXTURES[rule_id]
+    assert hits(bad, rule_id), f"{rule_id} missed its known-bad fixture"
+
+
+@pytest.mark.parametrize("rule_id", sorted(FIXTURES))
+def test_good_fixture_is_clean(rule_id):
+    _, good = FIXTURES[rule_id]
+    assert not hits(good, rule_id), \
+        f"{rule_id} false-positived on its known-good fixture"
+
+
+# ---------------------------------------------------------------------------
+# targeted rule behaviors
+# ---------------------------------------------------------------------------
+
+def test_pal201_symbolic_overhang_vs_padded():
+    """The masked-tail idiom (b*ceil(S/b) extent over a raw S dim) is
+    reported as an overhang; the padded-reshape idiom proves equal."""
+    tail = """
+    import math
+    import jax
+    from jax.experimental import pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def call(x, S, block):
+        b = min(block, S)
+        n = math.ceil(S / b)
+        xr = x.reshape(S, 4)
+        return pl.pallas_call(
+            kern,
+            grid=(n,),
+            in_specs=[pl.BlockSpec((b, 4), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((b, 4), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((n * b, 4), x.dtype),
+        )(xr)
+    """
+    found = hits(tail, "PAL201")
+    assert len(found) == 1 and "past the array end" in found[0].message
+    padded = tail.replace("x.reshape(S, 4)", "x.reshape(n * b, 4)")
+    assert not hits(padded, "PAL201")
+
+
+def test_jit101_static_uses_are_exempt():
+    src = """
+    import jax
+
+    @jax.jit
+    def f(x, table):
+        if "k" in {"k": 1}:
+            pass
+        if x.shape[0] == 1:
+            return x
+        if table is None:
+            return x
+        if len(x.shape) == 3:
+            return x
+        return x
+    """
+    assert not hits(src, "JIT101")
+
+
+def test_jit101_respects_static_argnames():
+    src = """
+    import jax
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("causal",))
+    def f(x, causal):
+        if causal:
+            return x
+        return -x
+    """
+    assert not hits(src, "JIT101")
+
+
+def test_jit104_loop_without_rebind():
+    src = """
+    import jax
+
+    def drive(step, caches, toks):
+        prog = jax.jit(step, donate_argnums=(0,))
+        for t in toks:
+            out = prog(caches, t)
+        return out
+    """
+    found = hits(src, "JIT104")
+    assert found and "loop" in found[0].message
+
+
+def test_pipe301_literal_boundaries():
+    assert hits("boundaries = [2, 1, 5]\n", "PIPE301")
+    assert hits("boundaries = [1, 4, 8]\n", "PIPE301")
+    assert not hits("boundaries = [0, 4, 8]\n", "PIPE301")
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+BAD_SYNC = """
+import jax.numpy as jnp
+import numpy as np
+
+def tick(tok):
+    y = jnp.argmax(tok)
+    return np.asarray(y){noqa}
+"""
+
+
+def _sync_findings(noqa: str):
+    return [f for f in analyze_source(dedent(BAD_SYNC.format(noqa=noqa)))
+            if f.rule == "JIT102"]
+
+
+def test_noqa_matching_rule_suppresses():
+    (f,) = _sync_findings("  # repro: noqa[JIT102] -- the intended sync")
+    assert f.suppressed and f.justification == "the intended sync"
+
+
+def test_noqa_wrong_rule_does_not_suppress():
+    (f,) = _sync_findings("  # repro: noqa[PAL201]")
+    assert not f.suppressed
+
+
+def test_noqa_blanket_suppresses():
+    (f,) = _sync_findings("  # repro: noqa")
+    assert f.suppressed and f.justification == ""
+
+
+def test_noqa_multiple_rules():
+    (f,) = _sync_findings("  # repro: noqa[PAL201,JIT102] -- both")
+    assert f.suppressed
+
+
+def test_noqa_on_standalone_comment_covers_next_line():
+    src = dedent("""
+    import jax.numpy as jnp
+    import numpy as np
+
+    def tick(tok):
+        y = jnp.argmax(tok)
+        # repro: noqa[JIT102] -- comment-above style
+        return np.asarray(y)
+    """)
+    (f,) = [f for f in analyze_source(src) if f.rule == "JIT102"]
+    assert f.suppressed and f.justification == "comment-above style"
+
+
+def test_parse_suppressions_lines():
+    sups = parse_suppressions(
+        "x = 1\ny = 2  # repro: noqa[A1] -- why\n")
+    assert 2 in sups and sups[2].covers("A1") and not sups[2].covers("B2")
+    assert sups[2].justification == "why"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_duplicate_rule_id_rejected():
+    with pytest.raises(ValueError):
+        register_rule("JIT101", "dup", "duplicate")(lambda ctx: [])
+
+
+def test_rules_have_ids_names_summaries():
+    for r in all_rules():
+        assert r.id and r.name and r.summary
+        assert r.id[:3] in ("JIT", "PAL", "PIP")
+
+
+# ---------------------------------------------------------------------------
+# CLI + end-to-end
+# ---------------------------------------------------------------------------
+
+def _run_cli(*argv, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=cwd or str(REPO))
+
+
+def test_cli_json_format_and_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(dedent(BAD_SYNC.format(noqa="")))
+    r = _run_cli(str(bad), "--format", "json", "--fail-on-findings")
+    assert r.returncode == 1, r.stderr
+    payload = json.loads(r.stdout)
+    assert payload["n_findings"] == 1
+    assert payload["findings"][0]["rule"] == "JIT102"
+
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    r = _run_cli(str(good), "--format", "json", "--fail-on-findings")
+    assert r.returncode == 0, r.stderr
+    assert json.loads(r.stdout)["n_findings"] == 0
+
+
+def test_cli_report_file_and_select(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(dedent(BAD_SYNC.format(noqa="")))
+    report = tmp_path / "report.json"
+    r = _run_cli(str(bad), "--select", "PAL201", "--report", str(report),
+                 "--fail-on-findings")
+    assert r.returncode == 0, r.stdout + r.stderr   # JIT102 not selected
+    assert json.loads(report.read_text())["n_findings"] == 0
+
+
+def test_cli_list_rules():
+    r = _run_cli("--list-rules")
+    assert r.returncode == 0
+    for rid in FIXTURES:
+        assert rid in r.stdout
+
+
+def test_cli_unknown_rule_is_usage_error():
+    r = _run_cli("--select", "NOPE999", "src/repro")
+    assert r.returncode == 2
+
+
+def test_default_paths_exclude_benchmarks_and_tests():
+    from repro.analysis import EXCLUDE_DIRS
+    assert {"benchmarks", "tests"} <= EXCLUDE_DIRS
+
+
+def test_analyzer_runs_clean_on_src_repro():
+    """End-to-end self-check: the shipped tree has zero unsuppressed
+    findings, and every suppression carries a justification."""
+    report = analyze_paths([str(REPO / "src" / "repro")])
+    assert report.files_scanned > 50
+    assert not report.parse_errors
+    assert report.findings == [], [f.format_text() for f in report.findings]
+    assert report.suppressed, "the audited suppressions should be visible"
+    for f in report.suppressed:
+        assert f.justification, f"suppression without justification: " \
+                                f"{f.location()}"
